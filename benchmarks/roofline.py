@@ -1,0 +1,126 @@
+"""Roofline analysis — derive the three terms per (arch × shape) cell from the
+dry-run's compiled artifact (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16, v5e)
+    memory     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+    collective = collective_bytes_per_device / ICI_link_bw   (~50 GB/s/link)
+
+Note on "per chips": XLA's cost_analysis runs on the SPMD-*partitioned*
+module, i.e. what ONE chip executes — so dividing by per-chip peaks is the
+same as the brief's HLO_total/(chips × peak) under perfect balance. The
+collective term uses summed collective operand bytes from the partitioned HLO
+(dryrun.collective_bytes); it is an upper-ish bound that ignores ring-step
+overlap, good for *ranking* bottlenecks and tracking deltas.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --single-pod-only --json dryrun.json
+    PYTHONPATH=src python -m benchmarks.roofline --json dryrun.json --md roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+# steps per "unit of work" for MODEL_FLOPS accounting
+_FWD_BWD = {"train": 6.0, "prefill": 2.0, "decode": 2.0, "long": 2.0}
+
+
+def model_flops(arch: str, shape: str, kind: str, chips: int) -> float:
+    """Analytic useful FLOPs per device: k·N_active·D_tokens / chips."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES, active_param_count
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n = active_param_count(cfg)
+    if kind in ("train", "prefill", "long"):
+        tokens = sh["global_batch"] * sh["seq_len"]
+    else:                      # decode: one new token per sequence
+        tokens = sh["global_batch"]
+    return _FWD_BWD[kind] * n * tokens / chips
+
+
+def analyse(rec: dict, chips: int = 256) -> dict:
+    """rec: one dry-run record (repro.launch.dryrun.run_cell output).
+
+    Prefers the trip-count-aware *_scaled fields (repro.launch.hlo_cost);
+    falls back to raw cost_analysis values for old records."""
+    flops = rec.get("flops_scaled") or rec.get("flops") or 0.0
+    nbytes = rec.get("bytes_scaled") or rec.get("bytes_accessed") or 0.0
+    coll = sum((rec.get("collective_bytes_scaled")
+                or rec.get("collective_bytes") or {}).values())
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"], rec.get("kind", "train"), chips)
+    bound = max(terms.values())
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        # fraction of the bound step time that is useful model math at peak:
+        # = (what an ideal implementation would take) / (this one's bound)
+    }
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) / raise useful_ratio toward 1",
+    "memory": "fuse elementwise chains, widen microbatch to raise arithmetic "
+              "intensity, keep weights resident (serve: tp sharding)",
+    "collective": "reshard to cut per-layer all-gathers, overlap collectives "
+                  "with compute, compress cross-pod traffic (grad_compress)",
+}
+
+
+def to_markdown(records: list[dict], chips: int = 256) -> str:
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "dominant | useful ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if rec.get("status") == "skip":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                         f"N/A (quadratic attn @500k) | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | FAIL | | | "
+                         f"| | | {rec.get('error','')[:60]} |")
+            continue
+        a = analyse(rec, chips)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec.get('kind','')} "
+            f"| {a['t_compute']:.3e} | {a['t_memory']:.3e} | {a['t_collective']:.3e} "
+            f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_frac']:.3f} | {_SUGGEST[a['dominant']]} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, help="dry-run records")
+    ap.add_argument("--md", default=None, help="write markdown table here")
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args(argv)
+    records = json.load(open(args.json))
+    records = [r for r in records if r.get("mesh") != "pod2x16x16"
+               or r.get("status") == "skip"]
+    md = to_markdown(records, args.chips)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+        print(f"wrote {args.md}")
+    else:
+        print(md)
+
+
+if __name__ == "__main__":
+    main()

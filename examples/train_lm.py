@@ -1,0 +1,76 @@
+"""End-to-end LM training driver: train a ~25M-param qwen2-family model for a
+few hundred steps on the synthetic token stream, with checkpointing and a
+simulated preemption + resume in the middle.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--fast]
+
+This is the single-host face of launch/train.py: same TrainState, same
+checkpoint protocol, same data determinism — scaled to CPU.
+"""
+import argparse
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import TokenDatasetConfig, token_batch_iterator
+from repro.models.lm import init_lm
+from repro.nn import count_params
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--fast", action="store_true")
+args = ap.parse_args()
+steps = 40 if args.fast else args.steps
+
+# ~25M params: scale the qwen2 smoke family up
+cfg = get_smoke_config("qwen2_7b").with_(
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=704, vocab=32_000)
+params = init_lm(jax.random.PRNGKey(0), cfg)
+print(f"model: {cfg.name}-family, {count_params(params)/1e6:.1f}M params")
+
+tcfg = TrainConfig(num_microbatches=2, peak_lr=1e-3,
+                   warmup_steps=max(steps // 10, 5), total_steps=steps)
+state = init_train_state(params, tcfg)
+step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+data = TokenDatasetConfig(vocab_size=cfg.vocab, seq_len=128, batch_size=8)
+
+ckpt_dir = "/tmp/repro_train_lm_ck"
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+half = steps // 2
+it = token_batch_iterator(data, seed=0)
+t0 = time.time()
+first = None
+for s in range(half):
+    state, m = step_fn(state, next(it))
+    first = first if first is not None else float(m["loss"])
+    if s % 20 == 0:
+        print(f"step {s:4d}  loss {float(m['loss']):.4f}  "
+              f"({(time.time()-t0)/(s+1):.2f}s/step)", flush=True)
+
+print(f"== simulated preemption at step {half}: checkpoint + discard state ==")
+ckpt.save(ckpt_dir, half, state)
+del state
+
+restored, at = ckpt.restore(
+    ckpt_dir, like=init_train_state(init_lm(jax.random.PRNGKey(0), cfg), tcfg))
+print(f"== resumed from step {at} ==")
+state = restored
+it = token_batch_iterator(data, seed=0, start_step=at)   # exact replay
+for s in range(at, steps):
+    state, m = step_fn(state, next(it))
+    if s % 20 == 0 or s == steps - 1:
+        print(f"step {s:4d}  loss {float(m['loss']):.4f}", flush=True)
+
+final = float(m["loss"])
+print(f"loss {first:.3f} -> {final:.3f} over {steps} steps "
+      f"({time.time()-t0:.0f}s total); checkpoint protocol exercised "
+      f"(atomic save, newest-complete restore, deterministic data replay)")
+assert final < first, "loss should decrease"

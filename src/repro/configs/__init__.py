@@ -1,0 +1,38 @@
+"""Architecture registry: one module per assigned arch (+ the paper's CNN).
+
+``get_config(arch_id)`` returns the full published config;
+``get_smoke_config(arch_id)`` a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "rwkv6_3b", "qwen2_72b", "starcoder2_15b", "nemotron4_15b", "qwen2_7b",
+    "whisper_tiny", "pixtral_12b", "olmoe_1b_7b", "arctic_480b", "zamba2_1p2b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "rwkv6-3b": "rwkv6_3b", "qwen2-72b": "qwen2_72b",
+    "starcoder2-15b": "starcoder2_15b", "nemotron-4-15b": "nemotron4_15b",
+    "qwen2-7b": "qwen2_7b", "whisper-tiny": "whisper_tiny",
+    "pixtral-12b": "pixtral_12b", "olmoe-1b-7b": "olmoe_1b_7b",
+    "arctic-480b": "arctic_480b", "zamba2-1.2b": "zamba2_1p2b",
+})
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch)
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{canonical(arch)}")
+
+
+def get_config(arch: str):
+    return _module(arch).full_config()
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).smoke_config()

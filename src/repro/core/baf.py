@@ -1,0 +1,183 @@
+"""Back-and-Forth (BaF) prediction — paper §3.3, Fig. 2, eq. (6).
+
+Backward: dequantized selected channels  Ẑ_C  --inverse-BN-->  pre-BN values
+          --deconv net (4 conv layers, PReLU, first layer x2 upsample)-->
+          estimate of ALL input channels X̃ of the split layer.
+Forward:  frozen split-layer conv (stride 2) + BN  -->  estimate Z̃ of ALL P
+          BN-output channels.
+Consolidation (eq. 6): on the C transmitted channels, keep Z̃ where it falls in
+the transmitted quantizer bin, else clamp to the nearest bin boundary
+(= clip(Z̃, bin_lo, bin_hi)).
+
+Two variants:
+  * conv (faithful, for the Tier-A CNN reproduction),
+  * stream (adapted, for (B, S, D) transformer hidden states at pod/split
+    boundaries — the "forward" re-application is the frozen transformer block).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.quant import QuantParams, bin_bounds, quantize
+
+
+# ---------------------------------------------------------------------------
+# Consolidation — eq. (6)
+# ---------------------------------------------------------------------------
+
+def consolidate(z_tilde_sel: jax.Array, codes: jax.Array,
+                qp: QuantParams) -> jax.Array:
+    """Eq. (6) on the transmitted channels.
+
+    z_tilde_sel : (..., C) BaF estimates of the transmitted channels
+    codes       : (..., C) integer codes actually received
+    Keeping Z̃ when quantize(Z̃)==code and otherwise clamping to the nearest
+    boundary of the code's bin is exactly ``clip(Z̃, bin_lo, bin_hi)``:
+    inside the bin the clip is the identity, outside it returns the nearest
+    boundary value. Pure-jnp reference; fused kernel in kernels/consolidate.py.
+    """
+    lo, hi = bin_bounds(codes, qp)
+    return jnp.clip(z_tilde_sel.astype(jnp.float32), lo, hi).astype(z_tilde_sel.dtype)
+
+
+def scatter_consolidated(z_tilde: jax.Array, consolidated: jax.Array,
+                         sel_idx: jax.Array) -> jax.Array:
+    """Write consolidated transmitted channels back into the full tensor."""
+    return z_tilde.at[..., sel_idx].set(consolidated.astype(z_tilde.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Conv BaF predictor (Tier A — faithful)
+# ---------------------------------------------------------------------------
+
+class BaFConvConfig(NamedTuple):
+    c: int            # transmitted channels
+    q: int            # input channels of the split layer (backward target)
+    hidden: int = 64  # width of the deconv net (paper does not specify)
+    dtype: object = jnp.float32
+
+
+def init_baf_conv(key, cfg: BaFConvConfig):
+    """4 conv layers, 3x3, PReLU except identity on the last (Fig. 2)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.dtype
+    return {
+        # first layer performs the x2 upsampling (transposed conv)
+        "up": nn.init_conv(k1, cfg.c, cfg.hidden, 3, dtype=d),
+        "up_act": nn.init_prelu(cfg.hidden, d),
+        "c2": nn.init_conv(k2, cfg.hidden, cfg.hidden, 3, dtype=d),
+        "c2_act": nn.init_prelu(cfg.hidden, d),
+        "c3": nn.init_conv(k3, cfg.hidden, cfg.hidden, 3, dtype=d),
+        "c3_act": nn.init_prelu(cfg.hidden, d),
+        "c4": nn.init_conv(k4, cfg.hidden, cfg.q, 3, dtype=d),  # identity act
+    }
+
+
+def baf_conv_backward(params, z_hat_sel: jax.Array, bn_sel: dict,
+                      *, dtype=None) -> jax.Array:
+    """Ẑ_C (B,H,W,C) -> X̃ (B,2H,2W,Q). Starts with inverse BN (paper §3.3)."""
+    x = nn.batchnorm_inverse(bn_sel, z_hat_sel)
+    x = nn.conv_transpose_apply(params["up"], x, stride=2, dtype=dtype)
+    x = nn.prelu_apply(params["up_act"], x)
+    x = nn.conv_apply(params["c2"], x, dtype=dtype)
+    x = nn.prelu_apply(params["c2_act"], x)
+    x = nn.conv_apply(params["c3"], x, dtype=dtype)
+    x = nn.prelu_apply(params["c3_act"], x)
+    x = nn.conv_apply(params["c4"], x, dtype=dtype)  # identity activation
+    return x
+
+
+def baf_conv_forward(split_conv, split_bn, x_tilde: jax.Array,
+                     *, stride=2, dtype=None) -> jax.Array:
+    """Forward predictor: frozen layer-l conv + BN -> Z̃ (all P channels)."""
+    y = nn.conv_apply(split_conv, x_tilde, stride=stride, dtype=dtype)
+    return nn.batchnorm_apply(split_bn, y)
+
+
+def gather_bn(bn: dict, sel_idx) -> dict:
+    """Per-channel BN params restricted to the selected channels."""
+    return {k: v[sel_idx] for k, v in bn.items()}
+
+
+def baf_conv_predict(baf_params, split_conv, split_bn, sel_idx,
+                     z_hat_sel: jax.Array, *,
+                     codes: jax.Array | None = None,
+                     qp: QuantParams | None = None,
+                     dtype=None) -> jax.Array:
+    """Full BaF pipeline: backward + forward (+ consolidation when codes given).
+
+    Returns Z̃ with all P channels (pre-activation). Training calls this with
+    codes=None (consolidation ignored during training, paper §4).
+    """
+    bn_sel = gather_bn(split_bn, sel_idx)
+    x_tilde = baf_conv_backward(baf_params, z_hat_sel, bn_sel, dtype=dtype)
+    z_tilde = baf_conv_forward(split_conv, split_bn, x_tilde, dtype=dtype)
+    if codes is not None:
+        assert qp is not None
+        cons = consolidate(z_tilde[..., sel_idx], codes, qp)
+        z_tilde = scatter_consolidated(z_tilde, cons, sel_idx)
+    return z_tilde
+
+
+# ---------------------------------------------------------------------------
+# Stream BaF predictor (Tier B/C — transformer hidden states)
+# ---------------------------------------------------------------------------
+
+class BaFStreamConfig(NamedTuple):
+    c: int              # transmitted channels of the D-dim stream
+    d_in: int           # dim of the backward-prediction target (block input)
+    hidden: int = 512
+    dtype: object = jnp.float32
+
+
+def init_baf_stream(key, cfg: BaFStreamConfig):
+    """Gated-MLP backward predictor for (B, S, D) streams.
+
+    4 projections mirroring the conv variant's depth: in -> hidden (PReLU) ->
+    hidden (PReLU) -> hidden (PReLU) -> d_in (identity). No upsampling: stream
+    splits are stride-1 (DESIGN.md §5).
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.dtype
+    return {
+        "l1": nn.init_dense(k1, cfg.c, cfg.hidden, dtype=d),
+        "a1": nn.init_prelu(cfg.hidden, d),
+        "l2": nn.init_dense(k2, cfg.hidden, cfg.hidden, dtype=d),
+        "a2": nn.init_prelu(cfg.hidden, d),
+        "l3": nn.init_dense(k3, cfg.hidden, cfg.hidden, dtype=d),
+        "a3": nn.init_prelu(cfg.hidden, d),
+        "l4": nn.init_dense(k4, cfg.hidden, cfg.d_in, dtype=d),
+    }
+
+
+def baf_stream_backward(params, z_hat_sel: jax.Array, *, dtype=None) -> jax.Array:
+    x = nn.dense_apply(params["l1"], z_hat_sel, dtype=dtype)
+    x = nn.prelu_apply(params["a1"], x)
+    x = nn.dense_apply(params["l2"], x, dtype=dtype)
+    x = nn.prelu_apply(params["a2"], x)
+    x = nn.dense_apply(params["l3"], x, dtype=dtype)
+    x = nn.prelu_apply(params["a3"], x)
+    return nn.dense_apply(params["l4"], x, dtype=dtype)
+
+
+def baf_stream_predict(baf_params, forward_fn: Callable[[jax.Array], jax.Array],
+                       sel_idx, z_hat_sel: jax.Array, *,
+                       codes: jax.Array | None = None,
+                       qp: QuantParams | None = None,
+                       dtype=None) -> jax.Array:
+    """Stream BaF: backward MLP -> frozen block re-application -> consolidation.
+
+    ``forward_fn`` is the frozen sender-side block (the transformer analogue of
+    the paper's layer-l conv+BN).
+    """
+    x_tilde = baf_stream_backward(baf_params, z_hat_sel, dtype=dtype)
+    z_tilde = forward_fn(x_tilde)
+    if codes is not None:
+        assert qp is not None
+        cons = consolidate(z_tilde[..., sel_idx], codes, qp)
+        z_tilde = scatter_consolidated(z_tilde, cons, sel_idx)
+    return z_tilde

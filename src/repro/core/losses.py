@@ -1,0 +1,17 @@
+"""Training losses for the BaF predictor — paper eq. (7)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def charbonnier(pred: jnp.ndarray, target: jnp.ndarray, eps: float = 1e-3,
+                mean: bool = True) -> jnp.ndarray:
+    """Charbonnier penalty sum sqrt((pred-target)^2 + eps^2) — eq. (7).
+
+    The paper sums over all elements; we expose ``mean`` because at framework
+    scale the mean keeps loss magnitudes comparable across shapes (the
+    optimizer-facing gradient differs only by a constant factor).
+    """
+    d = (pred.astype(jnp.float32) - target.astype(jnp.float32))
+    v = jnp.sqrt(jnp.square(d) + eps * eps)
+    return jnp.mean(v) if mean else jnp.sum(v)

@@ -1,0 +1,100 @@
+"""Per-channel uniform scalar quantization — paper eqs. (4)-(5).
+
+Channel-last convention: a "tensor" is (..., C) with one (min, max) pair per
+channel, stored at fp16 precision as in the paper (C*32 bits of side info).
+
+These are the pure-jnp reference implementations; the fused TPU hot path lives
+in ``repro.kernels.quantize`` and is validated against these.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantParams(NamedTuple):
+    """Side information transmitted with the code stream (fp16, per channel)."""
+    mins: jax.Array   # (C,) fp16
+    maxs: jax.Array   # (C,) fp16
+    bits: int
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    def step(self, dtype=jnp.float32) -> jax.Array:
+        rng = self.maxs.astype(dtype) - self.mins.astype(dtype)
+        return rng / self.levels
+
+    def side_info_bits(self) -> int:
+        # paper §3.2: min and max at fp16 => 32 bits per (channel, example)
+        return int(self.mins.size) * 32
+
+
+def compute_quant_params(x: jax.Array, bits: int, *,
+                         per_example: bool = False) -> QuantParams:
+    """Per-channel min/max, rounded to fp16 (paper).
+
+    per_example=False: one (m, M) per channel over all leading dims.
+    per_example=True : one (m, M) per (batch element, channel) — the paper's
+    setting (each transmitted tensor carries its own side info); mins/maxs are
+    kept with singleton spatial dims so they broadcast against x.
+    """
+    if per_example:
+        reduce_axes = tuple(range(1, x.ndim - 1))
+        mins = jnp.min(x, axis=reduce_axes, keepdims=True).astype(jnp.float16)
+        maxs = jnp.max(x, axis=reduce_axes, keepdims=True).astype(jnp.float16)
+    else:
+        reduce_axes = tuple(range(x.ndim - 1))
+        mins = jnp.min(x, axis=reduce_axes).astype(jnp.float16)
+        maxs = jnp.max(x, axis=reduce_axes).astype(jnp.float16)
+    # fp16 rounding of the max can land *below* a data point; widen to the
+    # next representable so codes never exceed 2^n - 1.
+    maxs = jnp.maximum(maxs, jnp.nextafter(maxs, jnp.array(jnp.inf, jnp.float16)))
+    return QuantParams(mins=mins, maxs=maxs, bits=bits)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Eq. (4): round((x - m)/(M - m) * (2^n - 1)) -> integer codes (uint8/16/32)."""
+    m = qp.mins.astype(jnp.float32)
+    M = qp.maxs.astype(jnp.float32)
+    rng = jnp.maximum(M - m, 1e-12)
+    scaled = (x.astype(jnp.float32) - m) / rng * qp.levels
+    codes = jnp.clip(jnp.round(scaled), 0, qp.levels)
+    if qp.bits <= 8:
+        return codes.astype(jnp.uint8)
+    if qp.bits <= 16:
+        return codes.astype(jnp.uint16)
+    return codes.astype(jnp.uint32)
+
+
+def dequantize(codes: jax.Array, qp: QuantParams, dtype=jnp.float32) -> jax.Array:
+    """Eq. (5): codes/(2^n - 1) * (M - m) + m."""
+    m = qp.mins.astype(jnp.float32)
+    M = qp.maxs.astype(jnp.float32)
+    x = codes.astype(jnp.float32) / qp.levels * (M - m) + m
+    return x.astype(dtype)
+
+
+def bin_bounds(codes: jax.Array, qp: QuantParams):
+    """Dequantized bounds of the quantizer bin each code occupies.
+
+    Bin k (obtained by round()) covers scaled values [k-1/2, k+1/2]; mapped back
+    to the data domain that is ``m + (k ± 1/2) * step``. Used by consolidation
+    (eq. 6): the value closest to an estimate while staying inside the
+    transmitted bin is ``clip(estimate, lo, hi)``.
+    """
+    m = qp.mins.astype(jnp.float32)
+    step = qp.step()
+    c = codes.astype(jnp.float32)
+    lo = m + (c - 0.5) * step
+    hi = m + (c + 0.5) * step
+    return lo, hi
+
+
+def quantization_mse(x: jax.Array, bits: int) -> jax.Array:
+    """Round-trip MSE at a given bit depth (analysis helper)."""
+    qp = compute_quant_params(x, bits)
+    return jnp.mean(jnp.square(dequantize(quantize(x, qp), qp) - x))

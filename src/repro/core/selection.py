@@ -1,0 +1,113 @@
+"""Channel selection — paper §3.1, eqs. (2)-(3).
+
+Offline analysis: given samples of the split layer's input tensor X (Q channels,
+at 2x the spatial resolution of Z when the split conv has stride 2) and the BN
+output tensor Z (P channels), rank the Z channels by their mean absolute
+correlation with *all* X channels, and keep the top C.
+
+Because the eq. (3) score of a channel does not change as others are removed,
+the paper's iterative re-selection over "remaining channels" reduces to a single
+descending sort of the per-channel totals; we implement it that way and test the
+equivalence explicitly (tests/test_selection.py).
+
+Works for conv tensors (B, H, W, C) and transformer streams (B, S, D): for the
+latter there is no stride, so a single "downsampled version" (s=0) is used and
+X/Z have equal spatial size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SelectionResult(NamedTuple):
+    order: np.ndarray      # (P,) channel indices of Z, best-first
+    scores: np.ndarray     # (P,) eq. (3) totals, same order as `order`
+    rho: np.ndarray        # (P, Q) mean absolute correlation matrix
+
+
+def _flatten_leading(x: jax.Array) -> jax.Array:
+    """(B, *spatial, C) -> (B*prod(spatial), C)."""
+    return x.reshape(-1, x.shape[-1])
+
+
+def stride2_offsets(x: jax.Array) -> list[jax.Array]:
+    """Four stride-2 downsampled versions of an NHWC tensor (paper: s=0..3)."""
+    return [x[:, i::2, j::2, :] for i in range(2) for j in range(2)]
+
+
+def _abs_corr(z_flat: jax.Array, x_flat: jax.Array) -> jax.Array:
+    """|Pearson rho| between every column of z_flat (P) and x_flat (Q) -> (P, Q)."""
+    z = z_flat.astype(jnp.float32)
+    x = x_flat.astype(jnp.float32)
+    z = z - jnp.mean(z, axis=0, keepdims=True)
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    zn = jnp.linalg.norm(z, axis=0)        # (P,)
+    xn = jnp.linalg.norm(x, axis=0)        # (Q,)
+    dots = z.T @ x                          # (P, Q)
+    denom = jnp.maximum(zn[:, None] * xn[None, :], 1e-12)
+    return jnp.abs(dots / denom)
+
+
+@jax.jit
+def correlation_matrix_conv(z: jax.Array, x: jax.Array) -> jax.Array:
+    """Eq. (2) for a stride-2 conv split: mean |rho| over the 4 offsets.
+
+    z: (B, H, W, P) BN output; x: (B, 2H, 2W, Q) layer input.
+    """
+    rhos = [_abs_corr(_flatten_leading(z), _flatten_leading(xs))
+            for xs in stride2_offsets(x)]
+    return sum(rhos) / 4.0
+
+
+@jax.jit
+def correlation_matrix_stream(z: jax.Array, x: jax.Array) -> jax.Array:
+    """Eq. (2) degenerate (stride-1) case for (B, S, D) transformer streams."""
+    return _abs_corr(_flatten_leading(z), _flatten_leading(x))
+
+
+def select_channels(rho: jax.Array) -> SelectionResult:
+    """Eq. (3): order Z channels by total correlation with all X channels."""
+    rho = np.asarray(rho)
+    totals = rho.sum(axis=1)
+    order = np.argsort(-totals, kind="stable")
+    return SelectionResult(order=order, scores=totals[order], rho=rho)
+
+
+def select_channels_greedy(rho: jax.Array, c: int) -> np.ndarray:
+    """Literal paper procedure: repeatedly take the argmax among remaining.
+
+    Kept as the reference for the sort-equivalence property test.
+    """
+    rho = np.asarray(rho)
+    totals = rho.sum(axis=1).copy()
+    chosen: list[int] = []
+    remaining = set(range(rho.shape[0]))
+    for _ in range(c):
+        p_star = max(remaining, key=lambda p: (totals[p], -p))
+        chosen.append(p_star)
+        remaining.remove(p_star)
+    return np.asarray(chosen)
+
+
+def accumulate_correlation(batches_zx: Sequence[tuple[jax.Array, jax.Array]],
+                           conv: bool = True) -> SelectionResult:
+    """Streaming eq. (2) over a dataset: average the per-batch rho matrices.
+
+    The paper computes rho over 1k COCO images; at scale the tensors do not fit
+    in memory at once, so we average per-batch correlation matrices (an
+    approximation of the pooled correlation that preserves the ranking in
+    practice; exactness is not required — the order is offline side info).
+    """
+    fn = correlation_matrix_conv if conv else correlation_matrix_stream
+    acc = None
+    n = 0
+    for z, x in batches_zx:
+        r = fn(z, x)
+        acc = r if acc is None else acc + r
+        n += 1
+    assert acc is not None, "no batches supplied"
+    return select_channels(acc / n)

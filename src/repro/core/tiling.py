@@ -1,0 +1,56 @@
+"""Channel tiling — paper §3.2.
+
+The C quantized channels (each H x W) are rearranged into one rectangular tiled
+image with ``cols = 2^ceil(log2(C)/2)`` channels across and
+``rows = 2^floor(log2(C)/2)`` down (C is always a power of two, so the tiling
+has no empty area). The tiled image is what the lossless image codec sees; the
+spatial adjacency of correlated channels is what makes it compress.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_grid(c: int) -> tuple[int, int]:
+    """(rows, cols) of the tiling for C channels (C must be a power of 2)."""
+    if c < 1 or (c & (c - 1)) != 0:
+        raise ValueError(f"C must be a power of two, got {c}")
+    lg = int(math.log2(c))
+    cols = 1 << ((lg + 1) // 2)   # ceil(lg/2)
+    rows = 1 << (lg // 2)          # floor(lg/2)
+    assert rows * cols == c
+    return rows, cols
+
+
+def tile_channels(x: jax.Array) -> jax.Array:
+    """(H, W, C) -> (rows*H, cols*W) tiled image (single example)."""
+    h, w, c = x.shape
+    rows, cols = tile_grid(c)
+    # channel k goes to tile (k // cols, k % cols), scanning row-major
+    y = jnp.transpose(x, (2, 0, 1))            # (C, H, W)
+    y = y.reshape(rows, cols, h, w)
+    y = jnp.transpose(y, (0, 2, 1, 3))         # (rows, H, cols, W)
+    return y.reshape(rows * h, cols * w)
+
+
+def untile_channels(img: jax.Array, c: int) -> jax.Array:
+    """Inverse of :func:`tile_channels`: (rows*H, cols*W) -> (H, W, C)."""
+    rows, cols = tile_grid(c)
+    th, tw = img.shape
+    h, w = th // rows, tw // cols
+    y = img.reshape(rows, h, cols, w)
+    y = jnp.transpose(y, (0, 2, 1, 3))         # (rows, cols, H, W)
+    y = y.reshape(c, h, w)
+    return jnp.transpose(y, (1, 2, 0))
+
+
+def tile_batch(x: jax.Array) -> jax.Array:
+    """(B, H, W, C) -> (B, rows*H, cols*W)."""
+    return jax.vmap(tile_channels)(x)
+
+
+def untile_batch(img: jax.Array, c: int) -> jax.Array:
+    return jax.vmap(lambda im: untile_channels(im, c))(img)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (ShapesDatasetConfig, shapes_batch_iterator,
+                                  TokenDatasetConfig, token_batch_iterator,
+                                  host_shard_slice)

@@ -1,0 +1,121 @@
+"""Deterministic synthetic data pipelines.
+
+Two generators:
+  * shapes  — the Tier-A detection-proxy image task (DESIGN.md §6): each image
+    contains one dominant geometric shape (class label) plus clutter; the CNN
+    must classify the shape. Trends in accuracy-vs-(C, n) are what the paper's
+    mAP curves measure, at reduced scale.
+  * tokens  — LM token streams with long-range structure (a stationary
+    Markov-ish mixture + copy spans) so LM losses move meaningfully during the
+    examples and smoke tests.
+
+Both are pure functions of (seed, step): restarting a job mid-stream reproduces
+exactly the same batches, which the checkpoint/resume test relies on; and each
+host in a multi-host launch slices its own rows via :func:`host_shard_slice`.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Images — shape classification proxy
+# ---------------------------------------------------------------------------
+
+class ShapesDatasetConfig(NamedTuple):
+    image_size: int = 64
+    num_classes: int = 8
+    batch_size: int = 16
+    noise: float = 0.15
+
+
+def _render_shapes(key, cfg: ShapesDatasetConfig):
+    """Render a batch of images on-device: class k = ring of k+3 blobs."""
+    b, s = cfg.batch_size, cfg.image_size
+    k_lbl, k_pos, k_rad, k_noise, k_col = jax.random.split(key, 5)
+    labels = jax.random.randint(k_lbl, (b,), 0, cfg.num_classes)
+    cx = jax.random.uniform(k_pos, (b, 2), minval=0.3, maxval=0.7) * s
+    radius = jax.random.uniform(k_rad, (b,), minval=0.15, maxval=0.3) * s
+    colors = jax.random.uniform(k_col, (b, 3), minval=0.4, maxval=1.0)
+
+    yy, xx = jnp.mgrid[0:s, 0:s]
+
+    def render_one(label, c, r, col):
+        n_blobs = label + 3
+        ang = jnp.arange(12) * (2 * jnp.pi / jnp.maximum(n_blobs, 1))
+        active = jnp.arange(12) < n_blobs
+        bx = c[0] + r * jnp.cos(ang)
+        by = c[1] + r * jnp.sin(ang)
+        d2 = (xx[None] - bx[:, None, None]) ** 2 + (yy[None] - by[:, None, None]) ** 2
+        blob = jnp.exp(-d2 / (2 * (0.06 * s) ** 2)) * active[:, None, None]
+        img = jnp.max(blob, axis=0)
+        return img[..., None] * col[None, None, :]
+
+    imgs = jax.vmap(render_one)(labels, cx, radius, colors)
+    imgs = imgs + cfg.noise * jax.random.normal(k_noise, imgs.shape)
+    return imgs.astype(jnp.float32), labels
+
+
+def shapes_batch_iterator(cfg: ShapesDatasetConfig, seed: int = 0,
+                          start_step: int = 0) -> Iterator[tuple]:
+    render = jax.jit(lambda k: _render_shapes(k, cfg))
+    step = start_step
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        yield render(key)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# Tokens — LM stream
+# ---------------------------------------------------------------------------
+
+class TokenDatasetConfig(NamedTuple):
+    vocab_size: int = 32000
+    seq_len: int = 512
+    batch_size: int = 8
+    copy_span: int = 32       # inject copy structure: x[t] = x[t - copy_span]
+    copy_prob: float = 0.5
+
+
+def _token_batch(key, cfg: TokenDatasetConfig):
+    k1, k2 = jax.random.split(key)
+    # base: per-sequence "topic" restricts tokens to a narrow band -> learnable
+    topics = jax.random.randint(k1, (cfg.batch_size, 1), 0,
+                                max(cfg.vocab_size // 256, 1))
+    base = topics * 256 + jax.random.randint(
+        k2, (cfg.batch_size, cfg.seq_len + 1), 0, min(256, cfg.vocab_size))
+    base = jnp.minimum(base, cfg.vocab_size - 1)
+    # copy structure
+    rolled = jnp.roll(base, cfg.copy_span, axis=1)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 7),
+                                cfg.copy_prob, base.shape)
+    pos_ok = jnp.arange(cfg.seq_len + 1)[None, :] >= cfg.copy_span
+    seq = jnp.where(mask & pos_ok, rolled, base)
+    return {"tokens": seq[:, :-1].astype(jnp.int32),
+            "labels": seq[:, 1:].astype(jnp.int32)}
+
+
+def token_batch_iterator(cfg: TokenDatasetConfig, seed: int = 0,
+                         start_step: int = 0) -> Iterator[dict]:
+    gen = jax.jit(lambda k: _token_batch(k, cfg))
+    step = start_step
+    while True:
+        yield gen(jax.random.fold_in(jax.random.PRNGKey(seed), step))
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-host sharding
+# ---------------------------------------------------------------------------
+
+def host_shard_slice(batch, host_index: int, host_count: int):
+    """Slice a global batch to this host's rows (data-parallel input feed)."""
+    def slc(x):
+        per = x.shape[0] // host_count
+        return x[host_index * per:(host_index + 1) * per]
+    return jax.tree.map(slc, batch)

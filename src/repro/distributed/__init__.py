@@ -1,0 +1,3 @@
+from repro.distributed.api import (axis_ctx, logical_axes, shard_hidden,
+                                   current_rules, AxisRules,
+                                   flash_decode_ctx, current_flash_decode)

@@ -1,0 +1,129 @@
+"""Logical-axis sharding shim.
+
+Models annotate activations with *logical* axis names ("batch", "seq",
+"hidden", "heads", "ffn", "experts", "vocab"); the launch layer binds those to
+physical mesh axes with an :class:`AxisRules` context. Outside any context the
+annotations are no-ops, so the exact same model code runs single-device smoke
+tests and 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> physical mesh axis (str, tuple of str, or None)."""
+    rules: dict = field(default_factory=dict)
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.rules.get(a) if a else None for a in logical])
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_ctx(rules: AxisRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def logical_axes(*names: Optional[str]) -> Optional[P]:
+    r = current_rules()
+    return r.spec(*names) if r is not None else None
+
+
+def shard_hidden(x, *names: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op w/o a context."""
+    spec = logical_axes(*names)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# Flash-decode context -------------------------------------------------------
+# When set, attention_decode routes the KV-cache update + softmax through the
+# shard_map flash-decode (distributed/collectives.py) instead of plain pjit —
+# the sequence-sharded cache is never all-gathered.
+
+@dataclass(frozen=True)
+class FlashDecode:
+    mesh: object
+    axis: str = "model"
+    batch_spec: object = "data"
+
+
+def current_flash_decode() -> Optional[FlashDecode]:
+    return getattr(_state, "flash_decode", None)
+
+
+@contextlib.contextmanager
+def flash_decode_ctx(mesh, *, axis: str = "model", batch_spec="data"):
+    prev = getattr(_state, "flash_decode", None)
+    _state.flash_decode = FlashDecode(mesh=mesh, axis=axis,
+                                      batch_spec=batch_spec)
+    try:
+        yield
+    finally:
+        _state.flash_decode = prev
+
+
+# Canonical rule sets -------------------------------------------------------
+
+def train_rules(multi_pod: bool, *, seq_parallel: bool = True) -> AxisRules:
+    """Training: batch -> (pod,)data; tensor dims -> model; fsdp -> data.
+
+    seq_parallel=False leaves the residual stream replicated across the model
+    axis (plain Megatron TP) — trades per-chip activation memory for the
+    per-layer activation all-gathers that act_hidden sharding implies
+    (EXPERIMENTS.md §Perf hillclimb lever)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return AxisRules(rules={
+        "batch": batch,
+        "seq": None,
+        "act_hidden": "model" if seq_parallel else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "ffn_expert": None,      # expert F dim: expert dim already on model
+        "vocab": "model",
+        "fsdp": "data",
+        "seq_model": "model",    # KV-cache / long-context seq sharding
+    })
+
+
+def serve_rules(multi_pod: bool, *, weight_mode: str = "2d",
+                seq_parallel: bool = True) -> AxisRules:
+    """Serving: like training but batch never crosses pods for one request
+    wave; weight_mode '2d' keeps fsdp sharding (all-gather per layer),
+    'tp' keeps weights only tensor-sharded (fsdp unbound)."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return AxisRules(rules={
+        "batch": batch,
+        "seq": None,
+        "act_hidden": "model" if seq_parallel else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "ffn_expert": None,
+        "vocab": "model",
+        "fsdp": "data" if weight_mode == "2d" else None,
+        "seq_model": "model",
+    })

@@ -1,0 +1,102 @@
+"""shard_map collectives: sequence-sharded flash-decode attention.
+
+Problem (EXPERIMENTS.md §Perf hillclimb 2): when kv_heads doesn't divide the
+model axis (qwen2-7b: 4 kv heads on a 16-way axis), the KV cache is sharded
+over the SEQUENCE dim. Under plain pjit, the decode step's
+dynamic-update-slice at a runtime position forces XLA to ALL-GATHER the whole
+cache every token (37.6 GB/chip/token for qwen2-7b @32k×128).
+
+Fix: express the decode attention as shard_map over the model axis —
+  * each chip holds its local sequence shard of K/V,
+  * the new token's K/V is written by exactly the chip whose shard covers
+    position ``length`` (local DUS, no collective),
+  * each chip computes a partial softmax (running max/normalizer) over its
+    shard, and the partials combine with one tiny psum/pmax — the classic
+    flash-decode merge. Wire bytes per token: O(B·H·hd) instead of the cache.
+
+q/k/v/new-token inputs are replicated across the model axis (they are
+KB-sized); only the cache is distributed.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _local_update(cache, new, length, axis: str, s_local: int):
+    """Write ``new`` (B, 1, K, hd) at global position ``length`` if it falls
+    inside this chip's shard; otherwise leave the shard untouched."""
+    idx = jax.lax.axis_index(axis)
+    local_pos = length - idx * s_local
+    in_shard = (local_pos >= 0) & (local_pos < s_local)
+    pos = jnp.clip(local_pos, 0, s_local - 1)
+    # select on the UPDATE (1 token), not the whole cache — the whole-cache
+    # jnp.where would materialize a full cache copy per layer per step
+    cur = jax.lax.dynamic_slice_in_dim(cache, pos, 1, axis=1)
+    upd = jnp.where(in_shard, new.astype(cache.dtype), cur)
+    return jax.lax.dynamic_update_slice_in_dim(cache, upd, pos, axis=1)
+
+
+def _partial_attention(q, k, v, length, axis: str, s_local: int):
+    """Partial softmax over the local shard. q: (B,H,1,hd); k/v: (B,S_loc,K,hd).
+    Returns combined output (B, H, hd) after the cross-shard merge."""
+    b, h, _, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    idx = jax.lax.axis_index(axis)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kf) * scale   # (B,K,g,S_loc)
+    valid = (jnp.arange(s_local) + idx * s_local) <= length
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+
+    m_loc = jnp.max(scores, axis=-1)                          # (B,K,g)
+    p = jnp.exp(scores - m_loc[..., None])
+    l_loc = jnp.sum(p, axis=-1)
+    o_loc = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+
+    m_glob = jax.lax.pmax(m_loc, axis)
+    corr = jnp.exp(m_loc - m_glob)
+    l_glob = jax.lax.psum(l_loc * corr, axis)
+    o_glob = jax.lax.psum(o_loc * corr[..., None], axis)
+    out = o_glob / jnp.maximum(l_glob, 1e-20)[..., None]
+    return out.reshape(b, h * hd)
+
+
+def seq_sharded_decode_attention(q, cache_k, cache_v, new_k, new_v, length,
+                                 mesh, *, axis: str = "model",
+                                 batch_spec=None):
+    """One-token attention against a sequence-sharded KV cache.
+
+    q: (B, H, hd) current query (RoPE applied), replicated over ``axis``.
+    cache_k/v: (B, S, K, hd) sharded P(batch_spec, axis, None, None).
+    new_k/v: (B, K, hd) this token's K/V, replicated over ``axis``.
+    Returns (out (B, H*hd) f32, new_cache_k, new_cache_v).
+    """
+    s = cache_k.shape[1]
+    n_shards = mesh.shape[axis]
+    s_local = s // n_shards
+    # only ``axis`` is manual inside the shard_map; the batch/data sharding
+    # stays automatic (pjit handles it outside), so specs mention only axis.
+    cache_spec = P(None, axis, None, None)
+    rep = P()
+
+    def f(qf, ck, cv, nk, nv, ln):
+        ck = _local_update(ck, nk[:, None], ln, axis, s_local)
+        cv = _local_update(cv, nv[:, None], ln, axis, s_local)
+        out = _partial_attention(qf[:, :, None, :], ck, cv, ln, axis, s_local)
+        return out, ck, cv
+
+    return jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(rep, cache_spec, cache_spec, rep, rep, P()),
+        out_specs=(rep, cache_spec, cache_spec),
+        axis_names={axis}, check_vma=False,
+    )(q, cache_k, cache_v, new_k, new_v, length)

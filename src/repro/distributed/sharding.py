@@ -1,0 +1,209 @@
+"""Parameter / optimizer-state / cache PartitionSpecs.
+
+2D "megatron + ZeRO-3" layout: the tensor dimension of every large matrix is
+sharded over the ``model`` axis and the remaining dimension over ``data``
+(fully-sharded parameters; XLA all-gathers per layer inside the scanned body).
+Optimizer state reuses the param spec verbatim (optim/adamw.py state is
+congruent with params by construction).
+
+Rules are name-based on the param-tree path, with a divisibility guard: a dim
+is only sharded if the mesh axis size divides it (e.g. whisper's 51865 vocab
+stays replicated). ``serve_weight_sharding='tp'`` drops the data-axis factor
+for decode (weights stay resident, no per-layer all-gather).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path-substring, spec template) — first match wins. Templates use logical
+# names resolved against the mesh: 'M' = model axis, 'D' = data/fsdp axis.
+# Position in the template aligns with the LAST ndim dims of the leaf (the
+# leading stacked-layer dim, if any, is always unsharded).
+_RULES = [
+    # embeddings / heads
+    (("embed",),       ("M", "D")),
+    (("dec_embed",),   ("M", "D")),
+    (("dec_pos",),     (None, "D")),
+    (("lm_head",),     ("D", "M")),
+    # attention
+    (("attn", "wq"),   ("D", "M")),
+    (("attn", "wk"),   ("D", "M")),
+    (("attn", "wv"),   ("D", "M")),
+    (("attn", "wo"),   ("M", "D")),
+    (("xattn", "wq"),  ("D", "M")),
+    (("xattn", "wk"),  ("D", "M")),
+    (("xattn", "wv"),  ("D", "M")),
+    (("xattn", "wo"),  ("M", "D")),
+    (("attn", "bq"),   ("M",)),
+    (("attn", "bk"),   ("M",)),
+    (("attn", "bv"),   ("M",)),
+    (("xattn", "bq"),  ("M",)),
+    (("xattn", "bk"),  ("M",)),
+    (("xattn", "bv"),  ("M",)),
+    # MoE (leading expert dim -> model axis = expert parallelism)
+    (("moe", "router"), ("D", None)),
+    (("moe", "wup"),    ("M", "D", None)),
+    (("moe", "wgate"),  ("M", "D", None)),
+    (("moe", "wdown"),  ("M", None, "D")),
+    # dense FFN (also matches arctic's moe.dense residual)
+    (("wgate",),       ("D", "M")),
+    (("wup",),         ("D", "M")),
+    (("wdown",),       ("M", "D")),
+    # rwkv6
+    (("mix_w1",),      ("D", None)),
+    (("mix_w2",),      (None, None, "D")),
+    (("wd_a",),        ("D", None)),
+    (("wd_b",),        (None, "D")),
+    (("cm_wk",),       ("D", "M")),
+    (("cm_wv",),       ("M", "D")),
+    (("cm_wr",),       ("D", "M")),
+    (("wr",),          ("D", "M")),
+    (("wg",),          ("D", "M")),
+    (("wo",),          ("M", "D")),
+    (("wk",),          ("D", "M")),
+    (("wv",),          ("D", "M")),
+    # mamba2
+    (("in_proj",),     ("D", "M")),
+    (("out_proj",),    ("M", "D")),
+    (("conv_w",),      (None, "M")),
+    (("conv_b",),      ("M",)),
+    (("gate_norm",),   ("M",)),
+    # BaF stream predictor (pod-boundary compression)
+    (("l1", "w"),      ("D", "M")),
+    (("l2", "w"),      ("M", "D")),
+    (("l3", "w"),      ("D", "M")),
+    (("l4", "w"),      ("M", "D")),
+]
+
+
+def _path_names(path) -> tuple:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey
+            out.append(str(k.key))
+        elif hasattr(k, "name"):       # GetAttrKey (NamedTuple fields)
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):        # SequenceKey
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[name]
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, model_axis="model",
+                data_axis: Optional[str] = "data") -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    for keys, tmpl in _RULES:
+        if all(any(k == n for n in names) for k in keys):
+            ndim = len(shape)
+            nt = len(tmpl)
+            if nt > ndim:     # template longer than leaf (unstacked variant)
+                tmpl = tmpl[-ndim:]
+                nt = len(tmpl)
+            spec = [None] * ndim
+            for i, t in enumerate(tmpl):
+                dim = ndim - nt + i
+                if t is None:
+                    continue
+                ax = model_axis if t == "M" else data_axis
+                if ax is None:
+                    continue
+                if shape[dim] % _axis_size(mesh, ax) == 0 and shape[dim] > 1:
+                    spec[dim] = ax
+            return P(*spec)
+    return P()   # norms, scalars, small tables: replicated
+
+
+def params_pspecs(params, mesh: Mesh, *, data_axis="data"):
+    """Pytree of PartitionSpecs congruent with ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(p, l, mesh, data_axis=data_axis), params)
+
+
+def params_shardings(params, mesh: Mesh, *, data_axis="data"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(params, mesh, data_axis=data_axis))
+
+
+def opt_state_pspecs(opt_state, params_specs):
+    """AdamW state: count replicated, mu/nu congruent with params."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(count=P(), mu=params_specs, nu=params_specs)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_pspec(global_batch: int, mesh: Mesh, *, multi_pod: bool):
+    """Shard the batch over (pod, data) when divisible; drop axes otherwise
+    (long_500k's batch=1 stays replicated)."""
+    axes = (("pod", "data") if multi_pod else ("data",))
+    usable = []
+    prod = 1
+    for a in axes:
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            usable.append(a)
+            prod *= mesh.shape[a]
+    if not usable:
+        return None
+    return tuple(usable) if len(usable) > 1 else usable[0]
+
+
+def cache_pspecs(cache, mesh: Mesh, batch_axes, *, model_axis="model",
+                 seq_fallback: bool = True):
+    """KV caches: (L, B, S, K, hd) -> batch over data/pod, kv-heads over model
+    when divisible; when not divisible, the sequence dim goes over model
+    (flash-decode combine) if ``seq_fallback`` else the cache is replicated
+    across model (per-chip copy; no collective on the decode path —
+    EXPERIMENTS.md §Perf hillclimb lever).
+    SSM states: (L, B, H, dk, dv) -> batch + heads-if-divisible."""
+    msize = mesh.shape[model_axis]
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        if "length" in names or "pos" in names or nd <= 1:
+            return P()
+        s = [None] * nd
+        # leading dim is the stacked-layer axis (L); batch is dim 1
+        if nd >= 2 and batch_axes is not None and \
+                leaf.shape[1] % int(np.prod([mesh.shape[a] for a in
+                                             (batch_axes if isinstance(batch_axes, tuple)
+                                              else (batch_axes,))])) == 0:
+            s[1] = batch_axes
+        if any(n in ("k", "v", "cross_k", "cross_v", "shared_k", "shared_v")
+               for n in names) and nd == 5:
+            # (L, B, S, K, hd)
+            if leaf.shape[3] % msize == 0:
+                s[3] = model_axis
+            elif seq_fallback and leaf.shape[2] % msize == 0:
+                s[2] = model_axis
+        elif "wkv" in names or "ssm" in names:
+            # (L, B, H, dk, dv): shard value dim over model (heads rarely divide)
+            if leaf.shape[2] % msize == 0:
+                s[2] = model_axis
+            elif leaf.shape[-1] % msize == 0:
+                s[-1] = model_axis
+        elif "conv" in names and nd == 4:
+            if leaf.shape[-1] % msize == 0:
+                s[-1] = model_axis
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §4).
+
+  quantize.py         fused per-channel min/max + quantize (paper eq. 4)
+  consolidate.py      fused bin-bound clip (paper eq. 6)
+  flash_attention.py  (block_q, block_kv) VMEM-tiled attention
+  linear_scan.py      chunked RWKV-6 / Mamba-2 state-passing scan
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles.
+Kernels execute in interpret mode on CPU (this container) and compile for
+TPU (the target).
+"""
+from repro.kernels.ops import (consolidate_fused, flash_attention, linear_scan,
+                               quantize_fused)

@@ -1,0 +1,125 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Layout adaptation (head flattening, kv-head repetition, decay clamping,
+QuantParams packing) lives here so kernel bodies stay pure block math. Every
+wrapper defaults ``interpret`` to True on CPU (this container) and False on
+TPU (the target); tests validate interpret-mode kernels against ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams
+from repro.kernels.consolidate import consolidate_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.linear_scan import linear_scan_pallas
+from repro.kernels.quantize import quantize_pallas
+from repro.models.linear_attention import LOG_DECAY_MIN
+
+
+# ---------------------------------------------------------------------------
+# Quantize (paper eq. 4) — per-(example, channel) side info
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("bits", "block_c", "interpret"))
+def quantize_fused(x: jax.Array, bits: int, *, block_c: int = 128,
+                   interpret: Optional[bool] = None):
+    """x: (B, ..., C) channel-last -> (codes uint8 (B, ..., C), QuantParams).
+
+    QuantParams mins/maxs have singleton middle dims (per_example layout of
+    core.quant.compute_quant_params), so dequantize/bin_bounds broadcast.
+    """
+    b, c = x.shape[0], x.shape[-1]
+    mid = x.shape[1:-1]
+    x3 = x.reshape(b, -1, c)
+    codes, mins, maxs = quantize_pallas(x3.astype(jnp.float32), bits,
+                                        block_c=block_c, interpret=interpret)
+    side_shape = (b,) + (1,) * len(mid) + (c,)
+    qp = QuantParams(mins=mins.reshape(side_shape),
+                     maxs=maxs.reshape(side_shape), bits=bits)
+    return codes.reshape(x.shape), qp
+
+
+# ---------------------------------------------------------------------------
+# Consolidation (paper eq. 6)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def consolidate_fused(z_tilde: jax.Array, codes: jax.Array, mins: jax.Array,
+                      maxs: jax.Array, bits: int, *,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """z_tilde/codes: (B, ..., C); mins/maxs broadcastable (B, ..1.., C)."""
+    b, c = z_tilde.shape[0], z_tilde.shape[-1]
+    z3 = z_tilde.reshape(b, -1, c)
+    out = consolidate_pallas(
+        z3.astype(jnp.float32), codes.reshape(b, -1, c),
+        mins.reshape(b, c).astype(jnp.float16),
+        maxs.reshape(b, c).astype(jnp.float16), bits, interpret=interpret)
+    return out.reshape(z_tilde.shape).astype(z_tilde.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) with K | H (GQA repeat here)."""
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    if kh != h:
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Linear scan (RWKV-6 / Mamba-2 SSD)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("chunk", "mode", "interpret"))
+def linear_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                log_decay: jax.Array, *, bonus: Optional[jax.Array] = None,
+                initial_state: Optional[jax.Array] = None, chunk: int = 16,
+                mode: str = "rwkv", interpret: Optional[bool] = None):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_decay: (B,S,H,dk) or (B,S,H,1);
+    bonus: (H, dk) or None; initial_state: (B,H,dk,dv) or None.
+    Returns (y (B,S,H,dv) f32, final_state (B,H,dk,dv) f32) — identical
+    contract to models.linear_attention.chunked_linear_attention.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_MIN, -1e-9)
+    ld = jnp.broadcast_to(ld, (b, s, h, dk))
+
+    def flat(t, d):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    qf, kf, vf = flat(q, dk), flat(k, dk), flat(v, dv)
+    ldf = flat(ld, dk)
+    bo = None
+    if bonus is not None:
+        bo = jnp.broadcast_to(bonus.astype(jnp.float32)[None], (b, h, dk))
+        bo = bo.reshape(b * h, dk)
+    s0 = None
+    if initial_state is not None:
+        s0 = initial_state.astype(jnp.float32).reshape(b * h, dk, dv)
+    y, sf = linear_scan_pallas(qf, kf, vf, ldf, bonus=bo, initial_state=s0,
+                               chunk=chunk, mode=mode, interpret=interpret)
+    return (y.reshape(b, h, s, dv).transpose(0, 2, 1, 3),
+            sf.reshape(b, h, dk, dv))

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the corresponding kernel is
+validated against (tests/test_kernels.py sweeps shapes/dtypes and
+assert_allclose's kernel vs oracle). They deliberately reuse the library's
+reference implementations so "kernel == oracle == paper equations" is a
+single chain.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams, bin_bounds, compute_quant_params, quantize
+from repro.models.linear_attention import reference_scan
+
+
+# ---------------------------------------------------------------------------
+# quantize.py oracle — paper eq. (4) with per-(example, channel) side info
+# ---------------------------------------------------------------------------
+
+def quantize_fused_ref(x: jax.Array, bits: int):
+    """x: (B, R, C) -> (codes uint8 (B, R, C), mins f16 (B, C), maxs f16 (B, C)).
+
+    Matches core.quant.compute_quant_params(per_example=True) + quantize,
+    with the side info squeezed to (B, C).
+    """
+    qp = compute_quant_params(x, bits, per_example=True)
+    codes = quantize(x, qp)
+    return codes, qp.mins.reshape(x.shape[0], -1), qp.maxs.reshape(x.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# consolidate.py oracle — paper eq. (6)
+# ---------------------------------------------------------------------------
+
+def consolidate_ref(z_tilde: jax.Array, codes: jax.Array, mins: jax.Array,
+                    maxs: jax.Array, bits: int) -> jax.Array:
+    """z_tilde/codes: (B, R, C); mins/maxs: (B, C) f16. clip(z̃, bin_lo, bin_hi)."""
+    qp = QuantParams(mins=mins[:, None, :], maxs=maxs[:, None, :], bits=bits)
+    lo, hi = bin_bounds(codes, qp)
+    return jnp.clip(z_tilde.astype(jnp.float32), lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention.py oracle — full-softmax attention
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q,k,v: (B, S, H, hd), kv heads already repeated. fp32 softmax."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear_scan.py oracle — O(S) recurrence (RWKV-6 / Mamba-2 SSD)
+# ---------------------------------------------------------------------------
+
+def linear_scan_ref(q, k, v, log_decay, *, bonus=None, initial_state=None,
+                    mode: str = "rwkv"):
+    """q,k: (B,S,H,dk) v: (B,S,H,dv) log_decay: (B,S,H,dk)|(B,S,H,1).
+
+    Pure recurrent scan — exactly models.linear_attention.reference_scan.
+    """
+    return reference_scan(q, k, v, log_decay, bonus=bonus,
+                          initial_state=initial_state, mode=mode)

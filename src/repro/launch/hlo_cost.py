@@ -1,0 +1,283 @@
+"""Trip-count-aware cost model over compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count, so for scanned-layer models it undercounts FLOPs/bytes by the
+(layers × microbatches) factor — and the same goes for collective bytes of
+per-layer all-gathers. This module parses ``compiled.as_text()`` into a
+computation call graph, multiplies ``while`` bodies by their
+``known_trip_count`` backend config, and accumulates:
+
+  flops             2·M·N·K for every dot (the ≥99% term in LM cells;
+                    convolutions are counted via window×features)
+  bytes             written-buffer model: every materializing op moves
+                    2 x its result bytes (one write + one downstream read);
+                    layout-only ops (reshape/transpose/bitcast/broadcast/
+                    convert) and bookkeeping are free, dynamic-update-slice
+                    counts the update slice only (in-place semantics)
+  collective_bytes  result bytes of all-gather / all-reduce / reduce-scatter /
+                    all-to-all / collective-permute, trip-scaled
+
+These are per-device quantities (the partitioned module is what one chip
+executes). The model intentionally over-approximates bytes relative to a
+perfect reuse analysis — it is for ranking bottlenecks and measuring deltas
+between implementations, not absolute wall-time prediction.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s*"
+                     r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)(%[\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+
+_SKIP_BYTES = {"parameter", "constant", "iota", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "custom-call", "reshape", "transpose", "convert", "broadcast",
+               "while", "conditional", "call", "get-dimension-size"}
+
+# Standalone elementwise ops in CPU-backend HLO that the TPU backend would
+# fuse into neighbours — counted as free so the bytes model approximates the
+# TPU memory system rather than the unfused CPU lowering (DESIGN.md §4 note).
+_ELEMENTWISE_FREE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "select",
+    "compare", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "power", "sqrt", "rsqrt", "cbrt", "logistic",
+    "and", "or", "not", "xor", "clamp", "is-finite", "atan2", "erf",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "stochastic-convert", "real", "imag", "expm1", "log1p", "clz",
+    "popcnt", "rem", "map", "pad", "reverse", "concatenate", "slice",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+
+
+def _shapes(text: str):
+    """All (dtype, dims) array shapes in a type string (tuples give several)."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d] or [1]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes_by: dict = field(default_factory=dict)   # op kind -> bytes
+    coll: dict = field(default_factory=dict)
+    # control-flow sub-calls: list of (callee, trip multiplier)
+    calls: list = field(default_factory=list)
+    # fused-kernel calls: (callee, boundary result bytes) — internals are one
+    # kernel: only FLOPs recurse, bytes are counted at the boundary
+    fusions: list = field(default_factory=list)
+    # if this computation's ROOT is a dynamic-update-slice, the update bytes
+    # (a fusion with such a root is an in-place update: scan ys stacking)
+    root_dus_bytes: float | None = None
+
+    @property
+    def bytes(self) -> float:
+        return sum(self.bytes_by.values())
+
+
+def _parse(txt: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    shapes: dict[str, str] = {}     # op name -> its result type string
+    cur: CompCost | None = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line)
+        if mc and line.endswith("{"):
+            cur = CompCost()
+            comps[mc.group(1)] = cur
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, result_type, op = md.groups()
+        shapes[name] = result_type
+        after = line[md.end():]
+
+        if op == "while":
+            m = _TRIP_RE.search(line)
+            trips = int(m.group(1)) if m else 1
+            body = _BODY_RE.search(line)
+            cond = _COND_RE.search(line)
+            if body:
+                cur.calls.append((body.group(1), trips))
+            if cond:
+                cur.calls.append((cond.group(1), trips))
+            continue
+        if op in ("call", "conditional"):
+            for m in _CALLS_RE.finditer(line):
+                cur.calls.append((m.group(1), 1))
+        elif op in ("fusion", "map", "reduce", "reduce-window", "scatter",
+                    "sort"):
+            for m in _CALLS_RE.finditer(line):
+                cur.fusions.append((m.group(1), 2 * _nbytes(result_type)))
+        if line.lstrip().startswith("ROOT") and op == "dynamic-update-slice":
+            ops_part = after.split("), ", 1)[0]
+            operands = _OPERAND_RE.findall(ops_part)
+            if len(operands) >= 2:
+                cur.root_dus_bytes = 2 * _nbytes(shapes.get(operands[1], ""))
+
+        # ---- flops: dot / convolution --------------------------------------
+        if op == "dot":
+            out_elems = 1
+            for dt, dims in _shapes(result_type):
+                for d in dims:
+                    out_elems *= d
+            ops_part = after.split(")", 1)[0]
+            first = _OPERAND_RE.search(ops_part)
+            k = 1
+            mcd = _LHS_CDIMS_RE.search(line)
+            if first and mcd:
+                lhs_type = shapes.get(first.group(1), "")
+                sh = _shapes(lhs_type)
+                if sh:
+                    dims = sh[0][1]
+                    for i in (int(x) for x in mcd.group(1).split(",") if x):
+                        if i < len(dims):
+                            k *= dims[i]
+            cur.flops += 2.0 * out_elems * k
+        elif op == "convolution":
+            out_elems = 1
+            for dt, dims in _shapes(result_type):
+                for d in dims:
+                    out_elems *= d
+            mwin = re.search(r"window=\{size=([\dx]+)", line)
+            kelems = 1
+            if mwin:
+                for d in mwin.group(1).split("x"):
+                    kelems *= int(d)
+            # input features from rhs shape via dim_labels ...io->...
+            ops_part = after.split(")", 1)[0]
+            operands = _OPERAND_RE.findall(ops_part)
+            in_feat = 1
+            mdl = re.search(r"dim_labels=\w+_(\w+)->", line)
+            if len(operands) >= 2 and mdl:
+                rhs_sh = _shapes(shapes.get(operands[1], ""))
+                if rhs_sh:
+                    i_pos = mdl.group(1).find("i")
+                    dims = rhs_sh[0][1]
+                    if 0 <= i_pos < len(dims):
+                        in_feat = dims[i_pos]
+            cur.flops += 2.0 * out_elems * kelems * in_feat
+
+        # ---- bytes (written-buffer model; fusions at boundary in _total) ---
+        if op not in _SKIP_BYTES and op not in _ELEMENTWISE_FREE \
+                and op not in ("fusion", "map"):
+            ops_part = after.split("), ", 1)[0]
+            operands = _OPERAND_RE.findall(ops_part)
+            if op == "dynamic-update-slice" and len(operands) >= 2:
+                upd = shapes.get(operands[1], "")
+                nb = 2 * _nbytes(upd)                  # read update + write
+            else:
+                nb = 2 * _nbytes(result_type)          # write + one read
+            cur.bytes_by[op] = cur.bytes_by.get(op, 0.0) + nb
+
+        # ---- collectives -----------------------------------------------------
+        base = op[:-6] if op.endswith("-start") else op
+        if base in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute") and not op.endswith("-done"):
+            cur.coll[base] = cur.coll.get(base, 0.0) + _nbytes(result_type)
+    return comps
+
+
+def _fusion_flops(comps, name, memo) -> float:
+    """FLOPs inside a fused computation (dots can live inside fusions)."""
+    if name in memo:
+        return memo[name]
+    memo[name] = 0.0
+    c = comps.get(name)
+    if c is None:
+        return 0.0
+    fl = c.flops
+    for callee, _ in c.fusions:
+        fl += _fusion_flops(comps, callee, memo)
+    memo[name] = fl
+    return fl
+
+
+def _total(comps: dict[str, CompCost], name: str, memo: dict,
+           fmemo: dict) -> tuple:
+    if name in memo:
+        return memo[name]
+    memo[name] = (0.0, {}, {})       # cycle guard
+    c = comps.get(name)
+    if c is None:
+        return memo[name]
+    fl, by, co = c.flops, dict(c.bytes_by), dict(c.coll)
+    for callee, boundary_bytes in c.fusions:
+        fl += _fusion_flops(comps, callee, fmemo)
+        callee_c = comps.get(callee)
+        if callee_c is not None and callee_c.root_dus_bytes is not None:
+            nb = callee_c.root_dus_bytes       # in-place update (scan ys)
+        else:
+            nb = boundary_bytes
+        by["fusion"] = by.get("fusion", 0.0) + nb
+    for callee, mult in c.calls:
+        f2, b2, c2 = _total(comps, callee, memo, fmemo)
+        fl += mult * f2
+        for k, v in b2.items():
+            by[k] = by.get(k, 0.0) + mult * v
+        for k, v in c2.items():
+            co[k] = co.get(k, 0.0) + mult * v
+    memo[name] = (fl, by, co)
+    return memo[name]
+
+
+def analyze_hlo_text(txt: str) -> dict:
+    """Returns {'flops', 'bytes', 'collective_bytes': {kind: bytes}} for the
+    ENTRY computation with while bodies scaled by known_trip_count."""
+    comps = _parse(txt)
+    entry = None
+    for raw in txt.splitlines():
+        if raw.startswith("ENTRY "):
+            m = _COMP_RE.match(raw)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:                 # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "bytes_by_op": {},
+                "collective_bytes": {}}
+    fl, by, co = _total(comps, entry, {}, {})
+    return {"flops": fl, "bytes": sum(by.values()), "bytes_by_op": by,
+            "collective_bytes": co}
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze_hlo_text(compiled.as_text())

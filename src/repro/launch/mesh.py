@@ -1,0 +1,32 @@
+"""Production mesh: one v5e pod = (data=16, model=16) = 256 chips;
+multi-pod adds a leading DCN 'pod' axis (2 pods = 512 chips).
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,267 @@
+"""Abstract input/step construction for every (arch x shape x mesh) cell.
+
+Everything here is ShapeDtypeStruct-based: no parameter or activation is ever
+allocated (the 480B arctic config lowers on a laptop). The dry-run, roofline
+benchmarks, and the real train/serve launchers all build their jit'd steps
+through this module so the sharding story exists in exactly one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import SHAPES, ArchConfig
+from repro.distributed import api as dist_api
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        params_pspecs)
+from repro.models.encdec import init_encdec, init_encdec_cache, encode
+from repro.models.lm import init_decode_cache, init_lm
+from repro.optim.adamw import AdamWState
+from repro.serve.engine import (init_long_state, make_decode_step,
+                                make_long_ingest, make_prefill_step)
+from repro.train.trainer import TrainConfig, TrainState, init_train_state, make_train_step
+
+LONG_BLOCK = 8192
+
+# per-arch microbatch counts for train_4k (sized so per-chip transients fit
+# 16 GB on the (16,16) mesh; revisited in EXPERIMENTS.md §Perf)
+TRAIN_MICROBATCHES = {
+    "qwen2_72b": 16, "arctic_480b": 16, "starcoder2_15b": 8,
+    "nemotron4_15b": 8, "pixtral_12b": 8, "qwen2_7b": 4,
+    "olmoe_1b_7b": 2, "rwkv6_3b": 2, "zamba2_1p2b": 8, "whisper_tiny": 1,
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_batch_specs(cfg: ArchConfig, shape_name: str, *, arch: str = ""):
+    """Abstract input batch for a given shape cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if cfg.family == "audio":
+        if kind in ("train", "prefill"):
+            return {
+                "audio_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        return {"token": _sds((b,), jnp.int32)}
+    if not cfg.embed_inputs:   # pixtral: precomputed patch/text embeddings
+        if kind in ("train", "prefill"):
+            return {
+                "embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((b, s), jnp.int32),
+            }
+        return {"token": _sds((b,), jnp.int32)}
+    if kind in ("train", "prefill"):
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+    if kind == "long":
+        return {"tokens": _sds((b, s), jnp.int32)}
+    return {"token": _sds((b,), jnp.int32)}
+
+
+def batch_shardings(specs, mesh: Mesh, *, multi_pod: bool):
+    def shard_one(sds):
+        bp = batch_pspec(sds.shape[0], mesh, multi_pod=multi_pod)
+        return NamedSharding(mesh, P(bp, *([None] * (len(sds.shape) - 1))))
+    return jax.tree.map(shard_one, specs)
+
+
+def abstract_params(cfg: ArchConfig, init_fn) -> Any:
+    return jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+
+
+@dataclass
+class CellProgram:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    fn: Callable
+    args: tuple              # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+    donate: tuple = ()
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def _vocab_axis(cfg: ArchConfig, mesh: Mesh, rules):
+    """Model-axis factor for the logits vocab dim — None when indivisible
+    (whisper's 51865 stays replicated at the boundary; internal shardings are
+    still free)."""
+    ax = rules.rules.get("vocab")
+    if ax is None:
+        return None
+    size = (mesh.shape[ax] if isinstance(ax, str)
+            else int(np.prod([mesh.shape[a] for a in ax])))
+    return ax if cfg.vocab % size == 0 else None
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
+               smoke: bool = False,
+               tcfg_overrides: Optional[dict] = None,
+               overrides: Optional[dict] = None) -> CellProgram:
+    """``overrides`` — perf hillclimb levers (EXPERIMENTS.md §Perf):
+      seq_parallel:       bool (default True)  act_hidden sharding on/off
+      decode_seq_shard:   bool (default True)  KV-cache seq-dim fallback
+      remat_policy:       'full' | 'dots' | 'dots_no_batch'
+      microbatches:       int
+    """
+    ov = overrides or {}
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if ov.get("bf16_norm_grad"):
+        cfg = cfg.with_(norm_grad="bf16")
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    if shape_name not in cfg.supported_shapes:
+        raise ValueError(f"{arch} does not support {shape_name} "
+                         f"(full attention is quadratic; see DESIGN.md §5)")
+
+    init_fn = init_encdec if cfg.family == "audio" else init_lm
+    a_params = abstract_params(cfg, init_fn)
+    # ZeRO across pods too: on the multi-pod mesh the fsdp factor spans
+    # (pod, data) so optimizer state halves per added pod — arctic-480b's
+    # fp32 master+moments (477B x 12 B) need all 512 chips to fit 16 GB HBM.
+    # EXCEPTION: the compressed cross-pod gradient exchange needs
+    # pod-REPLICATED params (per-pod ZeRO) — the int8 ring exchange replaces
+    # the cross-pod reduce entirely (Tier C).
+    compress = bool((tcfg_overrides or {}).get("grad_compress_bits"))
+    fsdp_axis = (("pod", "data") if (multi_pod and not compress) else "data")
+    if compress:
+        # pod-replicated, TP-only weights: the (data x model)-sharded embed
+        # gather inside the manual-pod shard_map trips an XLA partitioner
+        # CHECK (spmd_partitioner_util.cc:504); TP-only avoids it and is the
+        # natural pairing for compressed pod-DP (<=15B models).
+        fsdp_axis = None
+    p_specs = params_pspecs(a_params, mesh, data_axis=fsdp_axis)
+    if compress:
+        # ... and the vocab-sharded gather inside the manual region trips the
+        # same CHECK: keep the embedding tables replicated in this config.
+        def _fix(path, spec):
+            names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            return P() if any(n in ("embed", "lm_head") for n in names) else spec
+        p_specs = jax.tree_util.tree_map_with_path(
+            _fix, p_specs, is_leaf=lambda x: isinstance(x, P))
+    batch_specs = make_batch_specs(cfg, shape_name)
+    b_shard = batch_shardings(batch_specs, mesh, multi_pod=multi_pod)
+    seq_par = ov.get("seq_parallel", True)
+    rules = (dist_api.train_rules(multi_pod, seq_parallel=seq_par)
+             if kind == "train"
+             else dist_api.serve_rules(
+                 multi_pod, weight_mode=cfg.serve_weight_sharding,
+                 seq_parallel=seq_par))
+    bp = batch_pspec(sh["global_batch"], mesh, multi_pod=multi_pod)
+
+    if kind == "train":
+        kw = dict(num_microbatches=ov.get(
+            "microbatches", TRAIN_MICROBATCHES.get(arch, 4)))
+        if "remat_policy" in ov:
+            kw["remat_policy"] = ov["remat_policy"]
+        kw.update(tcfg_overrides or {})
+        tcfg = TrainConfig(**kw)
+        a_state = jax.eval_shape(
+            lambda p: init_train_state(p, tcfg),
+            jax.tree.map(lambda x: _sds(x.shape, jnp.float32), a_params))
+        state_specs = TrainState(
+            params=p_specs,
+            opt=AdamWState(count=P(), mu=p_specs, nu=p_specs),
+            step=P(),
+            ef=(p_specs if a_state.ef is not None else None))
+        step = make_train_step(cfg, tcfg, mesh=mesh, multi_pod=multi_pod)
+
+        def fn(state, batch):
+            with dist_api.axis_ctx(rules):
+                return step(state, batch)
+
+        out_shardings = (_named(mesh, state_specs),
+                         jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                      {"loss": 0, "grad_norm": 0, "lr": 0}))
+        return CellProgram(
+            fn=fn, args=(a_state, batch_specs),
+            in_shardings=(_named(mesh, state_specs), b_shard),
+            out_shardings=out_shardings, kind=kind, donate=(0,))
+
+    # serving-side weight sharding (optionally TP-only: fsdp axis unbound)
+    # + bf16 resident weights: serving never needs the fp32 master, and the
+    # per-layer f32->bf16 convert traffic is pure waste (§Perf HC2 it2)
+    if ov.get("serve_bf16_params", True):
+        cfg = cfg.with_(param_dtype=cfg.dtype)
+        a_params = abstract_params(cfg, init_fn)
+    data_axis = "data" if cfg.serve_weight_sharding == "2d" else None
+    p_specs = params_pspecs(a_params, mesh, data_axis=data_axis)
+
+    if kind == "prefill":
+        pre = make_prefill_step(cfg)
+
+        def fn(params, batch):
+            with dist_api.axis_ctx(rules):
+                return pre(params, batch)
+
+        logits_spec = NamedSharding(mesh, P(bp, None, _vocab_axis(cfg, mesh, rules)))
+        return CellProgram(
+            fn=fn, args=(a_params, batch_specs),
+            in_shardings=(_named(mesh, p_specs), b_shard),
+            out_shardings=logits_spec, kind=kind)
+
+    if kind == "decode":
+        dec = make_decode_step(cfg)
+        b = sh["global_batch"]
+        if cfg.family == "audio":
+            enc_len = cfg.encdec.enc_len_decode
+            a_cache = jax.eval_shape(
+                lambda p, e: init_encdec_cache(p, cfg, e, sh["seq_len"]),
+                a_params, _sds((b, enc_len, cfg.d_model), cfg.dtype))
+        else:
+            a_cache = jax.eval_shape(
+                lambda: init_decode_cache(cfg, b, sh["seq_len"]))
+        c_specs = cache_pspecs(a_cache, mesh, bp,
+                               seq_fallback=ov.get("decode_seq_shard", True))
+        tok = _sds((b,), jnp.int32)
+        flash = ov.get("flash_decode", False)
+
+        def fn(params, cache, token):
+            with dist_api.axis_ctx(rules):
+                if flash:
+                    with dist_api.flash_decode_ctx(mesh, batch_spec=bp):
+                        return dec(params, cache, token)
+                return dec(params, cache, token)
+
+        logits_spec = NamedSharding(mesh, P(bp, _vocab_axis(cfg, mesh, rules)))
+        return CellProgram(
+            fn=fn, args=(a_params, a_cache, tok),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                          NamedSharding(mesh, P(bp))),
+            out_shardings=(logits_spec, _named(mesh, c_specs)),
+            kind=kind, donate=(1,))
+
+    # long-context ingestion (ssm / hybrid only)
+    block = min(LONG_BLOCK, sh["seq_len"])
+    if cfg.family == "hybrid":
+        block = cfg.hybrid.attn_window_long
+    ingest = make_long_ingest(cfg, block=block)
+
+    def fn(params, tokens):
+        with dist_api.axis_ctx(rules):
+            return ingest(params, tokens)
+
+    a_state = jax.eval_shape(
+        lambda: init_long_state(cfg, sh["global_batch"], block))
+    ls_specs = cache_pspecs(a_state, mesh, bp)
+    logits_spec = NamedSharding(mesh, P(bp, _vocab_axis(cfg, mesh, rules)))
+    return CellProgram(
+        fn=fn, args=(a_params, batch_specs["tokens"]),
+        in_shardings=(_named(mesh, p_specs),
+                      NamedSharding(mesh, P(bp, None))),
+        out_shardings=(logits_spec, _named(mesh, ls_specs)), kind=kind)

@@ -1,0 +1,293 @@
+"""GQA attention with RoPE: train/prefill (full or windowed causal) and
+single-token decode against a KV cache.
+
+Pure-jnp einsum formulation — pjit/SPMD shards it via the logical-axis
+annotations; the Pallas flash kernel (kernels/flash_attention.py) is the TPU
+hot path and is validated against this code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.distributed import shard_hidden
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> tuple:
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias=False, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": nn.normal(kq, (d_model, n_heads * head_dim), 0.02, dtype),
+        "wk": nn.normal(kk, (d_model, n_kv_heads * head_dim), 0.02, dtype),
+        "wv": nn.normal(kv, (d_model, n_kv_heads * head_dim), 0.02, dtype),
+        "wo": nn.normal(ko, (n_heads * head_dim, d_model), 0.02, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, dtype):
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv_heads, head_dim)
+    v = v.reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+#
+# KV heads are REPEATED to the full head count before the score matmul: the
+# grouped-einsum alternative reshapes H into (kv, group), and neither factor
+# is divisible by a 16-way model axis for kv<16 archs — repetition keeps the
+# head dim shardable (the repeat is itself sharded, so per-chip cost is
+# h_local x S x hd). Scores are computed q-block by q-block (lax.scan) so the
+# fp32 score buffer is O(q_block x S) per head shard, never O(S^2) — the
+# pure-jnp analogue of flash attention's tiling (the Pallas kernel does the
+# same with VMEM blocks).
+
+def repeat_kv(k, h: int):
+    """(B, S, K, hd) -> (B, S, H, hd) by repeating each kv head H/K times."""
+    b, s, kh, hd = k.shape
+    if kh == h:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, h // kh, hd))
+    return k.reshape(b, s, h, hd)
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      window: Optional[int] = None, q_block: int = 1024):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd) (kv already repeated). fp32 softmax,
+    scanned over q blocks. ``window``: band mask (each query sees the previous
+    ``window`` keys inclusive)."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    bq = min(q_block, sq)
+    nb = sq // bq
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(sk)
+
+    def one_block(start):
+        qb = jax.lax.dynamic_slice_in_dim(q, start, bq, axis=1).astype(jnp.float32)
+        scores = jnp.einsum("bqhd,bshd->bhqs", qb, kf) * scale
+        if causal or window is not None:
+            qpos = start + q_offset + jnp.arange(bq)
+            mask = jnp.ones((bq, sk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", probs, vf).astype(q.dtype)
+
+    if nb == 1:
+        return one_block(0)
+    outs = jax.lax.map(one_block, jnp.arange(nb) * bq)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd)
+
+
+def gqa_scores_softmax_v(q, k, v, *, causal: bool, q_offset=0):
+    """Back-compat wrapper: repeats kv heads then runs blocked attention."""
+    h = q.shape[2]
+    return blocked_attention(q, repeat_kv(k, h), repeat_kv(v, h),
+                             causal=causal, q_offset=q_offset)
+
+
+def windowed_attention(q, k, v, window: int):
+    """Banded causal attention: each position attends to the previous
+    ``window`` positions (inclusive of itself). Chunked so the score matrix is
+    O(S * 2W) instead of O(S^2) — the long-context path for hybrid archs.
+
+    Requires S % window == 0.
+    """
+    b, s, h, hd = q.shape
+    _, _, kh, _ = k.shape
+    g = h // kh
+    w = window
+    nc = s // w
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qc = q.reshape(b, nc, w, h, hd)
+    kc = k.reshape(b, nc, w, kh, hd)
+    vc = v.reshape(b, nc, w, kh, hd)
+    # keys for chunk i: chunk i-1 ++ chunk i  (zero-pad chunk -1)
+    k_prev = jnp.pad(kc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vc[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    k2 = jnp.concatenate([k_prev, kc], axis=2)          # (B,nc,2W,K,hd)
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+    qg = qc.reshape(b, nc, w, kh, g, hd)
+    scores = jnp.einsum("bnqkgh,bnskh->bnkgqs", qg.astype(jnp.float32),
+                        k2.astype(jnp.float32)) * scale
+    qpos = jnp.arange(w)[:, None] + w                    # position within 2W frame
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - w)
+    # chunk 0 has no previous chunk: padded keys are masked by position anyway
+    first = (jnp.arange(nc) == 0)[None, :, None, None, None, None]
+    valid = jnp.where(first, mask[None, None, None, None] & (kpos >= w)[None, None, None, None],
+                      mask[None, None, None, None])
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnkgqs,bnskh->bnqkgh", probs, v2.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+# Attention backend: 'jnp' (blocked_attention — what the CPU dry-run lowers)
+# or 'pallas' (kernels/flash_attention.py — the TPU hot path; interpret-mode
+# on CPU). Auto-selects pallas on TPU backends; override via set_backend().
+_BACKEND = None
+
+
+def set_backend(name: Optional[str]):
+    """'jnp' | 'pallas' | None (auto: pallas on TPU, jnp elsewhere)."""
+    global _BACKEND
+    _BACKEND = name
+
+
+def _backend() -> str:
+    if _BACKEND is not None:
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def attention_apply(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                    positions=None, causal=True, window: Optional[int] = None,
+                    kv_override=None, dtype=None):
+    """Train/prefill attention. ``kv_override=(k_src)`` -> cross-attention."""
+    dtype = dtype or x.dtype
+    b, s, _ = x.shape
+    if kv_override is None:
+        q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, dtype)
+        if positions is None:
+            positions = jnp.arange(s)
+        cos, sin = rope_freqs(head_dim, rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        # cross-attention: queries from x, keys/values from encoder output
+        src = kv_override
+        q = (x @ p["wq"].astype(dtype)).reshape(b, s, n_heads, head_dim)
+        k = (src @ p["wk"].astype(dtype)).reshape(b, src.shape[1], n_kv_heads, head_dim)
+        v = (src @ p["wv"].astype(dtype)).reshape(b, src.shape[1], n_kv_heads, head_dim)
+        causal = False
+    q = shard_hidden(q, "batch", None, "heads", None)
+    k = repeat_kv(k, n_heads)
+    v = repeat_kv(v, n_heads)
+    k = shard_hidden(k, "batch", None, "heads", None)
+    v = shard_hidden(v, "batch", None, "heads", None)
+    if _backend() == "pallas" and q.shape[1] % 128 == 0 \
+            and k.shape[1] % 128 == 0:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        bq, sq, h, hd = q.shape
+        qf = q.transpose(0, 2, 1, 3).reshape(bq * h, sq, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(bq * h, k.shape[1], hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(bq * h, v.shape[1], hd)
+        o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window)
+        out = o.reshape(bq, h, sq, hd).transpose(0, 2, 1, 3)
+    else:
+        out = blocked_attention(q, k, v, causal=causal, window=window)
+    y = out.reshape(b, s, n_heads * head_dim) @ p["wo"].astype(dtype)
+    return y
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # (B, S_max, K, hd)
+    v: jax.Array
+    length: jax.Array      # () int32 — tokens currently in cache
+
+
+def init_kv_cache(batch, max_len, n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    shape = (batch, max_len, n_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def attention_decode(p, x, cache: KVCache, *, n_heads, n_kv_heads, head_dim,
+                     rope_theta, dtype=None):
+    """One-token decode: x (B, 1, D) against a KV cache.
+
+    The softmax reductions run over the (possibly mesh-sharded) cache sequence
+    dim; under SPMD that lowers to partial reduce + all-reduce — the
+    flash-decode combine emerges from the sharding annotations.
+    """
+    dtype = dtype or x.dtype
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, dtype)
+    pos = cache.length[None]
+    cos, sin = rope_freqs(head_dim, rope_theta, pos)      # (1, hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    from repro.distributed import current_flash_decode
+    fd = current_flash_decode()
+    if fd is not None:
+        # shard_map flash-decode: local cache update + partial-softmax merge —
+        # the sequence-sharded cache never leaves its chips (§Perf HC2).
+        from repro.distributed.collectives import seq_sharded_decode_attention
+        out, nk, nv = seq_sharded_decode_attention(
+            q[:, 0], cache.k, cache.v, k[:, 0], v[:, 0], cache.length,
+            fd.mesh, axis=fd.axis, batch_spec=fd.batch_spec)
+        y = out.astype(dtype)[:, None, :] @ p["wo"].astype(dtype)
+        return y, KVCache(k=nk, v=nv, length=cache.length + 1)
+
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+    s_max = cache.k.shape[1]
+    g = n_heads // n_kv_heads
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    scale = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        new_k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s_max)[None] <= cache.length
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, new_v.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * head_dim).astype(dtype)
+    y = out @ p["wo"].astype(dtype)
+    return y, KVCache(k=new_k, v=new_v, length=cache.length + 1)

@@ -1,0 +1,150 @@
+"""YOLO-v3-front CNN for the Tier-A faithful reproduction.
+
+Topology mirrors the Darknet-53 stem through the paper's split layer l=12
+(conv/BN/Leaky blocks, residual connections, three stride-2 stages), with a
+width multiplier so the same topology trains on CPU at reduced scale
+(DESIGN.md §6). At width_mult=1 and input 512x512 the split tensor is exactly
+the paper's 64x64x256 with Q=128 input channels.
+
+Layer schedule (channels at width_mult=1):
+  conv 32 s1 | conv 64 s2 | res(32,64) | conv 128 s2 | res(64,128) x2 |
+  conv 256 s2 <- SPLIT LAYER (l=12): stride 2, L=3, BN, no residual across it.
+Edge device runs through the split layer's BN; cloud runs Leaky(sigma) onward.
+The cloud tail continues darknet-style (res(128,256) x N) into a classification
+head for the synthetic detection-proxy task.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+
+
+class CNNConfig(NamedTuple):
+    width_mult: float = 1.0
+    input_size: int = 512
+    num_classes: int = 8
+    tail_res_blocks: int = 2
+    dtype: object = jnp.float32
+
+    def ch(self, c: int) -> int:
+        return max(4, int(round(c * self.width_mult)))
+
+    @property
+    def split_p(self) -> int:      # P: channels of the split BN output
+        return self.ch(256)
+
+    @property
+    def split_q(self) -> int:      # Q: input channels of the split conv
+        return self.ch(128)
+
+    @property
+    def split_hw(self) -> int:     # spatial size of the split output
+        return self.input_size // 8
+
+
+def _conv_bn(key, cin, cout, ksize, dtype):
+    return {"conv": nn.init_conv(key, cin, cout, ksize, bias=False, dtype=dtype),
+            "bn": nn.init_batchnorm(cout, dtype)}
+
+
+def init_cnn(key, cfg: CNNConfig):
+    keys = jax.random.split(key, 32)
+    d, ch = cfg.dtype, cfg.ch
+    ki = iter(keys)
+    params = {
+        "stem": [
+            _conv_bn(next(ki), 3, ch(32), 3, d),            # l1  s1
+            _conv_bn(next(ki), ch(32), ch(64), 3, d),       # l2  s2
+            _conv_bn(next(ki), ch(64), ch(32), 1, d),       # res1.a
+            _conv_bn(next(ki), ch(32), ch(64), 3, d),       # res1.b
+            _conv_bn(next(ki), ch(64), ch(128), 3, d),      # l5  s2
+            _conv_bn(next(ki), ch(128), ch(64), 1, d),      # res2.a
+            _conv_bn(next(ki), ch(64), ch(128), 3, d),      # res2.b
+            _conv_bn(next(ki), ch(128), ch(64), 1, d),      # res3.a
+            _conv_bn(next(ki), ch(64), ch(128), 3, d),      # res3.b
+        ],
+        # split layer l=12: conv 3x3 stride 2 -> BN (sigma applied in cloud)
+        "split": _conv_bn(next(ki), ch(128), ch(256), 3, d),
+        "tail": [],
+        "head": None,
+    }
+    for _ in range(cfg.tail_res_blocks):
+        params["tail"].append(_conv_bn(next(ki), ch(256), ch(128), 1, d))
+        params["tail"].append(_conv_bn(next(ki), ch(128), ch(256), 3, d))
+    params["head"] = nn.init_dense(next(ki), ch(256), cfg.num_classes, dtype=d)
+    return params
+
+
+# strides of the 9 stem conv layers; residual pairs are (a 1x1, b 3x3)
+_STEM_STRIDES = [1, 2, 1, 1, 2, 1, 1, 1, 1]
+_STEM_RES_AT = {3, 6, 8}  # after these indices, add the pre-block input
+
+
+def _apply_conv_bn(p, x, stride, *, train=False):
+    y = nn.conv_apply(p["conv"], x, stride=stride)
+    if train:
+        y, new_bn = nn.batchnorm_train_apply(p["bn"], y)
+        return nn.leaky_relu(y), {"conv": p["conv"], "bn": new_bn}
+    return nn.leaky_relu(nn.batchnorm_apply(p["bn"], y)), p
+
+
+def cnn_edge(params, img, *, train=False):
+    """Mobile-side compute: stem, then split conv + BN (NO activation).
+
+    Returns (x_split_input, z_bn_output[, new_params if train]).
+    """
+    x = img
+    new_stem = []
+    shortcut = None
+    for i, (p, s) in enumerate(zip(params["stem"], _STEM_STRIDES)):
+        if i in {2, 5, 7}:              # entering a residual pair
+            shortcut = x
+        x, p_new = _apply_conv_bn(p, x, s, train=train)
+        if i in _STEM_RES_AT:
+            x = x + shortcut
+        new_stem.append(p_new)
+    x_in = x                            # X^{(l)}: input of the split layer (Q ch)
+    z = nn.conv_apply(params["split"]["conv"], x_in, stride=2)
+    if train:
+        z, new_bn = nn.batchnorm_train_apply(params["split"]["bn"], z)
+        new_params = dict(params)
+        new_params["stem"] = new_stem
+        new_params["split"] = {"conv": params["split"]["conv"], "bn": new_bn}
+        return x_in, z, new_params
+    z = nn.batchnorm_apply(params["split"]["bn"], z)
+    return x_in, z
+
+
+def cnn_cloud(params, z, *, train=False):
+    """Cloud-side compute: sigma (Leaky) of the split layer, tail, head."""
+    x = nn.leaky_relu(z)
+    new_tail = []
+    for i in range(0, len(params["tail"]), 2):
+        sc = x
+        x, pa = _apply_conv_bn(params["tail"][i], x, 1, train=train)
+        x, pb = _apply_conv_bn(params["tail"][i + 1], x, 1, train=train)
+        x = x + sc
+        new_tail += [pa, pb]
+    feat = jnp.mean(x, axis=(1, 2))     # GAP
+    logits = nn.dense_apply(params["head"], feat)
+    if train:
+        new_params = dict(params)
+        new_params["tail"] = new_tail
+        return logits, new_params
+    return logits
+
+
+def cnn_forward(params, img):
+    _, z = cnn_edge(params, img)
+    return cnn_cloud(params, z)
+
+
+def cnn_forward_train(params, img):
+    """Full forward with batch-stat BN; returns (logits, params-with-new-EMA)."""
+    _, z, p1 = cnn_edge(params, img, train=True)
+    logits, p2 = cnn_cloud(p1, z, train=True)
+    return logits, p2

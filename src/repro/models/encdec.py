@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny).
+
+Per the assignment the conv audio frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S_enc, D) from input_specs(). Encoder blocks
+are bidirectional LayerNorm attention + GELU FFN; decoder blocks are causal
+self-attention + cross-attention + FFN. Decode carries self-attn KV caches and
+precomputed cross-attn K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.distributed import shard_hidden
+from repro.models.attention import (KVCache, attention_apply, attention_decode,
+                                    init_attention, init_kv_cache)
+from repro.models.ffn import ffn_apply, init_ffn
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": nn.init_layernorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, qkv_bias=True, dtype=dtype),
+        "ln2": nn.init_layernorm(cfg.d_model, dtype),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_block_init(key, cfg, dtype)
+    p["ln_x"] = nn.init_layernorm(cfg.d_model, dtype)
+    p["xattn"] = init_attention(k3, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, qkv_bias=True, dtype=dtype)
+    return p
+
+
+def init_encdec(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype
+    ed = cfg.encdec
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], ed.enc_layers)
+    dec_keys = jax.random.split(ks[1], ed.dec_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": nn.init_layernorm(cfg.d_model, dtype),
+        "dec_embed": nn.normal(ks[2], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "dec_pos": nn.normal(ks[3], (8192, cfg.d_model), 0.02, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": nn.init_layernorm(cfg.d_model, dtype),
+        # whisper ties the output head to the decoder embedding
+    }
+
+
+def _attn(cfg, p, x, **kw):
+    return attention_apply(p, x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           head_dim=cfg.hd, rope_theta=cfg.rope_theta, **kw)
+
+
+def encode(params, cfg: ArchConfig, audio_embeds):
+    """audio_embeds: (B, S_enc, D) precomputed frame embeddings (stub frontend)."""
+    x = audio_embeds.astype(cfg.dtype)
+    x = shard_hidden(x, "batch", None, "act_hidden")
+
+    def body(carry, lp):
+        h = _attn(cfg, lp["attn"], nn.layernorm_apply(lp["ln1"], carry),
+                  causal=False, dtype=cfg.dtype)
+        carry = carry + h
+        carry = carry + ffn_apply(lp["ffn"], nn.layernorm_apply(lp["ln2"], carry),
+                                  "gelu", dtype=cfg.dtype)
+        return shard_hidden(carry, "batch", None, "act_hidden"), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return nn.layernorm_apply(params["enc_norm"], x)
+
+
+def decode_train(params, cfg: ArchConfig, tokens, enc_out):
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    b, s = tokens.shape
+    pos = params["dec_pos"]
+    if s > pos.shape[0]:   # mechanical long-shape support: tile the table
+        reps = -(-s // pos.shape[0])
+        pos = jnp.tile(pos, (reps, 1))
+    x = params["dec_embed"][tokens].astype(cfg.dtype) \
+        + pos[:s][None].astype(cfg.dtype)
+    x = shard_hidden(x, "batch", None, "act_hidden")
+
+    def body(carry, lp):
+        h = _attn(cfg, lp["attn"], nn.layernorm_apply(lp["ln1"], carry),
+                  causal=True, dtype=cfg.dtype)
+        carry = carry + h
+        hx = _attn(cfg, lp["xattn"], nn.layernorm_apply(lp["ln_x"], carry),
+                   kv_override=enc_out, dtype=cfg.dtype)
+        carry = carry + hx
+        carry = carry + ffn_apply(lp["ffn"], nn.layernorm_apply(lp["ln2"], carry),
+                                  "gelu", dtype=cfg.dtype)
+        return shard_hidden(carry, "batch", None, "act_hidden"), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = nn.layernorm_apply(params["dec_norm"], x)
+    logits = x @ params["dec_embed"].T.astype(cfg.dtype)
+    return shard_hidden(logits, "batch", None, "vocab")
+
+
+def encdec_loss(params, cfg: ArchConfig, batch):
+    from repro.models.lm import xent_loss
+    enc_out = encode(params, cfg, batch["audio_embeds"])
+    logits = decode_train(params, cfg, batch["tokens"], enc_out)
+    return xent_loss(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_kv: Any           # stacked (L_dec, ...) KVCache
+    cross_k: jax.Array     # (L_dec, B, S_enc, K, hd) precomputed
+    cross_v: jax.Array
+    pos: jax.Array         # () int32
+
+
+def init_encdec_cache(params, cfg: ArchConfig, enc_out, max_len: int):
+    """Precompute cross-attn K/V from encoder output; empty self-KV caches."""
+    b = enc_out.shape[0]
+    kv = init_kv_cache(b, max_len, cfg.n_kv_heads, cfg.hd, cfg.dtype)
+    ld = cfg.encdec.dec_layers
+
+    def cross_kv(lp):
+        src = enc_out.astype(cfg.dtype)
+        k = (src @ lp["xattn"]["wk"].astype(cfg.dtype))
+        v = (src @ lp["xattn"]["wv"].astype(cfg.dtype))
+        if "bk" in lp["xattn"]:
+            k = k + lp["xattn"]["bk"].astype(cfg.dtype)
+            v = v + lp["xattn"]["bv"].astype(cfg.dtype)
+        s = src.shape[1]
+        return (k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
+                v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
+
+    ck, cv = jax.vmap(cross_kv)(params["dec_layers"])
+    return EncDecCache(
+        self_kv=jax.tree.map(lambda a: jnp.broadcast_to(a[None], (ld,) + a.shape), kv),
+        cross_k=ck, cross_v=cv, pos=jnp.zeros((), jnp.int32))
+
+
+def encdec_decode_step(params, cfg: ArchConfig, cache: EncDecCache, token):
+    """One decoder token against self-KV caches + fixed cross K/V."""
+    dtype = cfg.dtype
+    b = token.shape[0]
+    x = params["dec_embed"][token].astype(dtype) \
+        + params["dec_pos"][cache.pos % params["dec_pos"].shape[0]].astype(dtype)
+
+    def body(carry, lp_kv_ck_cv):
+        lp, kv, ck, cv = lp_kv_ck_cv
+        xs = carry[:, None, :]
+        h, new_kv = attention_decode(lp["attn"], nn.layernorm_apply(lp["ln1"], xs),
+                                     kv, n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                                     rope_theta=cfg.rope_theta, dtype=dtype)
+        carry = carry + h[:, 0]
+        # cross attention against precomputed K/V (no cache update)
+        xn = nn.layernorm_apply(lp["ln_x"], carry[:, None, :])
+        q = (xn @ lp["xattn"]["wq"].astype(dtype))
+        if "bq" in lp["xattn"]:
+            q = q + lp["xattn"]["bq"].astype(dtype)
+        q = q.reshape(b, 1, cfg.n_heads, cfg.hd)
+        g = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.hd)
+        sc = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) / jnp.sqrt(cfg.hd)
+        pr = jax.nn.softmax(sc, axis=-1)
+        hx = jnp.einsum("bkgqs,bskh->bqkgh", pr, cv.astype(jnp.float32))
+        hx = hx.reshape(b, 1, cfg.n_heads * cfg.hd).astype(dtype) \
+            @ lp["xattn"]["wo"].astype(dtype)
+        carry = carry + hx[:, 0]
+        y = ffn_apply(lp["ffn"], nn.layernorm_apply(lp["ln2"], carry[:, None, :]),
+                      "gelu", dtype=dtype)[:, 0]
+        return carry + y, new_kv
+
+    x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], cache.self_kv,
+                                       cache.cross_k, cache.cross_v))
+    x = nn.layernorm_apply(params["dec_norm"], x[:, None, :])
+    logits = (x @ params["dec_embed"].T.astype(dtype))[:, 0]
+    return logits, cache._replace(self_kv=new_kv, pos=cache.pos + 1)

@@ -1,0 +1,37 @@
+"""Feed-forward variants: SwiGLU (qwen2/pixtral/olmoe/arctic), GELU
+(starcoder2/whisper), squared-ReLU (nemotron-4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.distributed import shard_hidden
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wdown": nn.normal(k2, (d_ff, d_model), 0.02, dtype)}
+    if act == "swiglu":
+        p["wgate"] = nn.normal(k1, (d_model, d_ff), 0.02, dtype)
+        p["wup"] = nn.normal(k3, (d_model, d_ff), 0.02, dtype)
+    else:
+        p["wup"] = nn.normal(k1, (d_model, d_ff), 0.02, dtype)
+    return p
+
+
+def ffn_apply(p, x, act: str, *, dtype=None):
+    dtype = dtype or x.dtype
+    up = x @ p["wup"].astype(dtype)
+    up = shard_hidden(up, "batch", None, "ffn")
+    if act == "swiglu":
+        gate = x @ p["wgate"].astype(dtype)
+        gate = shard_hidden(gate, "batch", None, "ffn")
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    elif act == "sq_relu":
+        h = nn.squared_relu(up)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return h @ p["wdown"].astype(dtype)

@@ -1,0 +1,150 @@
+"""Chunked linear-attention / SSM scan — the shared sub-quadratic engine for
+RWKV-6 (per-channel data-dependent decay + bonus) and Mamba-2 (scalar
+per-head decay). TPU adaptation of the CUDA recurrences (DESIGN.md §4):
+intra-chunk terms are MXU matmuls, the inter-chunk state is carried through a
+lax.scan — O(S) time, O(chunk^2) score blocks.
+
+Recurrence (state S_t: (dk, dv) per head):
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    rwkv mode:  y_t = q_t·S_{t-1} + (q_t ⊙ u ⊙ k_t)·v_t      (bonus u)
+    ssm  mode:  y_t = q_t·S_t                                  (self included)
+
+Numerical strategy: within a chunk the decay factorization
+exp(la_t - la_i) = exp(la_t)·exp(-la_i) can overflow when cumulative log-decay
+is large, so ``chunk`` defaults small enough that |sum log w| stays < 80 with
+log-decay clamped to >= LOG_DECAY_MIN; Mamba-2's scalar decay instead uses the
+exact pairwise-difference matrix (always <= 0 exponents). The Pallas kernel
+(kernels/linear_scan.py) mirrors the same math with two-level blocking.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_MIN = -4.0   # clamp: e^{|min|*chunk} must stay inside fp32
+
+
+def _chunk(x, n):
+    """(B, S, ...) -> (B, S//n, n, ...)."""
+    b, s = x.shape[:2]
+    return x.reshape(b, s // n, n, *x.shape[2:])
+
+
+# Scan backend: 'jnp' (this module) or 'pallas' (kernels/linear_scan.py,
+# the TPU hot path). Auto-selects pallas on TPU; override via set_backend().
+_BACKEND = None
+
+
+def set_backend(name: Optional[str]):
+    global _BACKEND
+    _BACKEND = name
+
+
+def _backend() -> str:
+    if _BACKEND is not None:
+        return _BACKEND
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def chunked_linear_attention(q, k, v, log_decay, *, bonus: Optional[jax.Array] = None,
+                             chunk: int = 16, initial_state=None,
+                             per_channel: bool = True, mode: str = "rwkv"):
+    """q,k: (B,S,H,dk)  v: (B,S,H,dv)  log_decay: (B,S,H,dk) or (B,S,H,1).
+
+    bonus: (H, dk) rwkv-6 current-token bonus ``u`` (mode='rwkv' only).
+    Returns (y: (B,S,H,dv), final_state: (B,H,dk,dv)).
+    """
+    if _backend() == "pallas":
+        from repro.kernels.ops import linear_scan
+        return linear_scan(q, k, v, log_decay, bonus=bonus,
+                           initial_state=initial_state, chunk=chunk, mode=mode)
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    ld = jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, -1e-9)
+
+    qc, kc, vc, ldc = (_chunk(t, chunk) for t in (q, k, v, ld))
+    # -> (B, NC, L, H, *); reorder to (NC, B, H, L, *) for the scan
+    def perm(t):
+        return jnp.transpose(t, (1, 0, 3, 2, 4))
+    qc, kc, vc, ldc = perm(qc), perm(kc), perm(vc), perm(ldc)
+    nc = qc.shape[0]
+
+    la = jnp.cumsum(ldc, axis=-2)                    # inclusive cum-log-decay
+    la_prev = la - ldc                               # exclusive
+    la_end = la[..., -1:, :]                         # (..., 1, dk|1)
+
+    # q-side decays: exclusive for rwkv (uses S_{t-1}), inclusive for ssm
+    la_q = la_prev if mode == "rwkv" else la
+    qd = qc * jnp.exp(la_q)                          # (NC,B,H,L,dk)
+    kd = kc * jnp.exp(-la)                           # safe: |la| bounded by clamp*chunk
+    k_rem = kc * jnp.exp(la_end - la)                # decay from i to chunk end
+
+    # intra-chunk scores; strict lower-triangular for rwkv, inclusive for ssm
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1 if mode == "rwkv" else 0)
+    scores = jnp.einsum("cbhtd,cbhsd->cbhts", qd, kd) * tri
+    y_intra = jnp.einsum("cbhts,cbhsv->cbhtv", scores, vc)
+
+    if mode == "rwkv" and bonus is not None:
+        bq = jnp.einsum("cbhtd,hd,cbhtd->cbht", qc, bonus.astype(f32), kc)
+        y_intra = y_intra + bq[..., None] * vc
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def body(state, inp):
+        qd_i, k_rem_i, v_i, la_end_i = inp
+        y_inter = jnp.einsum("bhtd,bhdv->bhtv", qd_i, state)
+        new_state = jnp.exp(la_end_i[..., 0, :])[..., None] * state \
+            + jnp.einsum("bhtd,bhtv->bhdv", k_rem_i, v_i)
+        return new_state, y_inter
+
+    final_state, y_inter = jax.lax.scan(body, s0, (qd, k_rem, vc, la_end))
+    y = y_intra + y_inter                            # (NC,B,H,L,dv)
+    y = jnp.transpose(y, (1, 0, 3, 2, 4)).reshape(b, s, h, dv)
+    return y, final_state
+
+
+def linear_attention_step(q, k, v, log_decay, state, *, bonus=None,
+                          mode: str = "rwkv"):
+    """Single-token recurrent step for decode. q,k: (B,H,dk), v: (B,H,dv),
+    log_decay: (B,H,dk) or (B,H,1), state: (B,H,dk,dv)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, -1e-9))
+    kv = k[..., :, None] * v[..., None, :]           # (B,H,dk,dv)
+    if mode == "rwkv":
+        y = jnp.einsum("bhd,bhdv->bhv", q, state)
+        if bonus is not None:
+            y = y + jnp.einsum("bhd,hd,bhd->bh", q, bonus.astype(f32), k)[..., None] * v
+        new_state = w[..., None] * state + kv
+    else:
+        new_state = w[..., None] * state + kv
+        y = jnp.einsum("bhd,bhdv->bhv", q, new_state)
+    return y, new_state
+
+
+def reference_scan(q, k, v, log_decay, *, bonus=None, initial_state=None,
+                   mode: str = "rwkv"):
+    """O(S) pure recurrent oracle (used by tests to validate the chunked path
+    and the Pallas kernel)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def body(state, inp):
+        qi, ki, vi, ldi = inp
+        y, state = linear_attention_step(qi, ki, vi, ldi, state,
+                                         bonus=bonus, mode=mode)
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_decay))
+    state, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state

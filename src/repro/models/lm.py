@@ -1,0 +1,349 @@
+"""Unified LM: one init/forward/prefill/decode covering every assigned family.
+
+  dense  — pre-norm GQA + FFN blocks (qwen2-72b/7b, starcoder2, nemotron-4,
+           pixtral backbone)
+  moe    — GQA + MoE-FFN blocks (olmoe, arctic w/ dense residual)
+  ssm    — RWKV-6 blocks (attention-free)
+  hybrid — Mamba-2 backbone with a SHARED full-attention block applied every
+           ``shared_attn_every`` layers (zamba2); in long-context mode the
+           shared block uses windowed attention (sub-quadratic end to end)
+
+Layers are scanned (stacked params) so the traced HLO is O(1) in depth; the
+hybrid schedule scans homogeneous segments and applies the shared block
+between segments. Each block is wrapped in jax.checkpoint (remat) for
+training memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.distributed import shard_hidden
+from repro.models.attention import (KVCache, attention_apply, attention_decode,
+                                    init_attention, init_kv_cache)
+from repro.models.ffn import ffn_apply, init_ffn
+from repro.models.moe import init_moe, moe_apply
+from repro.models.mamba2 import (Mamba2State, init_mamba2_block,
+                                 init_mamba2_state, mamba2_block,
+                                 mamba2_block_step)
+from repro.models.rwkv6 import (RWKV6State, init_rwkv6_block, init_rwkv6_state,
+                                rwkv6_block, rwkv6_block_step)
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg, dtype):
+    return (nn.init_rmsnorm(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else nn.init_layernorm(cfg.d_model, dtype))
+
+
+def _norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        if getattr(cfg, "norm_grad", "f32") == "bf16":
+            return nn.rmsnorm_lowmem_apply(p, x)
+        return nn.rmsnorm_apply(p, x)
+    return nn.layernorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": _init_norm(cfg, dtype),
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, qkv_bias=cfg.qkv_bias, dtype=dtype),
+        "ln2": _init_norm(cfg, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.d_ff, cfg.moe, cfg.act, dtype)
+    else:
+        p["ffn"] = init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _init_layer(key, cfg: ArchConfig, dtype):
+    if cfg.family == "ssm":
+        return init_rwkv6_block(key, cfg.d_model, cfg.ssm.head_dim,
+                                lora_rank=cfg.ssm.decay_lora,
+                                d_ff=cfg.d_ff, dtype=dtype)
+    if cfg.family == "hybrid":
+        return init_mamba2_block(key, cfg.d_model, state_dim=cfg.ssm.state_dim,
+                                 head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand,
+                                 conv_width=cfg.ssm.conv_width, dtype=dtype)
+    return _init_attn_block(key, cfg, dtype)
+
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = cfg.param_dtype
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params: dict[str, Any] = {
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    # vlm: train/prefill consume precomputed (vision+text) embeds, but decode
+    # still embeds *text* tokens — only the vision tower is stubbed.
+    if cfg.embed_inputs or cfg.family == "vlm":
+        params["embed"] = nn.normal(k_emb, (cfg.vocab, cfg.d_model), 0.02, dtype)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["lm_head"] = nn.normal(k_head, (cfg.d_model, cfg.vocab), 0.02, dtype)
+    if cfg.family == "hybrid":
+        params["shared"] = _init_attn_block(k_shared, cfg.with_(moe=None), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _attn_ffn_block(lp, x, cfg: ArchConfig, *, window=None, dtype=None):
+    """Returns (y, aux) — aux is the MoE load-balance loss (0 for dense)."""
+    h = attention_apply(lp["attn"], _norm(cfg, lp["ln1"], x),
+                        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                        causal=True, window=window, dtype=dtype)
+    x = x + h
+    xn = _norm(cfg, lp["ln2"], x)
+    if cfg.moe is not None:
+        y, aux = moe_apply(lp["moe"], xn, cfg.moe, cfg.act, cfg.d_ff, dtype=dtype)
+    else:
+        y, aux = ffn_apply(lp["ffn"], xn, cfg.act, dtype=dtype), 0.0
+    x = x + y
+    return shard_hidden(x, "batch", None, "act_hidden"), aux
+
+
+def _ssm_or_hybrid_block(lp, x, cfg: ArchConfig, *, dtype=None):
+    if cfg.family == "ssm":
+        y = rwkv6_block(lp, x, head_dim=cfg.ssm.head_dim, chunk=cfg.ssm.chunk,
+                        dtype=dtype)
+    else:
+        y = mamba2_block(lp, x, state_dim=cfg.ssm.state_dim,
+                         head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand,
+                         chunk=cfg.ssm.chunk, dtype=dtype)
+    return shard_hidden(y, "batch", None, "act_hidden")
+
+
+def _segment_bounds(cfg: ArchConfig):
+    """Hybrid schedule: segment ends where the shared attn block is applied."""
+    if cfg.family != "hybrid":
+        return [(0, cfg.n_layers)]
+    step = cfg.hybrid.shared_attn_every
+    bounds = []
+    i = 0
+    while i < cfg.n_layers:
+        j = min(i + step, cfg.n_layers)
+        bounds.append((i, j))
+        i = j
+    return bounds
+
+
+def _scan_layers(layers, x, body, lo, hi):
+    """Scan a slice [lo, hi) of the stacked layer params."""
+    sliced = jax.tree.map(lambda a: a[lo:hi], layers)
+    x, auxes = jax.lax.scan(lambda carry, lp: body(carry, lp), x, sliced)
+    return x, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+_REMAT_POLICIES = {
+    # recompute everything inside a block (min memory, 8ND flops)
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+    # keep matmul outputs, recompute elementwise only (~6.5ND flops)
+    "dots": lambda: jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": lambda: jax.checkpoint_policies
+        .checkpoint_dots_with_no_batch_dims,
+}
+
+
+def lm_hidden(params, cfg: ArchConfig, *, tokens=None, embeds=None,
+              window=None, remat: bool = True, remat_policy: str = "full"):
+    """Run the stack; returns (hidden (B,S,D), moe_aux)."""
+    dtype = cfg.dtype
+    if embeds is None:
+        x = params["embed"][tokens].astype(dtype)
+    else:
+        x = embeds.astype(dtype)
+    x = shard_hidden(x, "batch", None, "act_hidden")
+
+    if cfg.family in ("ssm", "hybrid"):
+        def body(carry, lp):
+            y = _ssm_or_hybrid_block(lp, carry, cfg, dtype=dtype)
+            return y, jnp.zeros((), jnp.float32)
+    else:
+        def body(carry, lp):
+            y, aux = _attn_ffn_block(lp, carry, cfg, window=window, dtype=dtype)
+            return y, jnp.asarray(aux, jnp.float32)
+    if remat:
+        policy = _REMAT_POLICIES[remat_policy]()
+        body = jax.checkpoint(body, policy=policy)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for (lo, hi) in _segment_bounds(cfg):
+        x, aux = _scan_layers(params["layers"], x, body, lo, hi)
+        aux_total = aux_total + aux
+        if cfg.family == "hybrid":
+            shared_window = window or (cfg.hybrid.attn_window_long
+                                       if x.shape[1] > 65536 else None)
+            sb = partial(_attn_ffn_block, params["shared"], cfg=cfg.with_(moe=None),
+                         window=shared_window, dtype=dtype)
+            if remat:
+                x = jax.checkpoint(lambda t: sb(x=t)[0],
+                                   policy=_REMAT_POLICIES[remat_policy]())(x)
+            else:
+                x = sb(x=x)[0]
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def lm_logits(params, cfg: ArchConfig, hidden):
+    if cfg.tie_embeddings and "embed" in params:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = hidden @ w.astype(cfg.dtype)
+    return shard_hidden(logits, "batch", None, "vocab")
+
+
+def lm_forward(params, cfg: ArchConfig, *, tokens=None, embeds=None,
+               window=None, remat=True, remat_policy="full"):
+    hidden, aux = lm_hidden(params, cfg, tokens=tokens, embeds=embeds,
+                            window=window, remat=remat,
+                            remat_policy=remat_policy)
+    return lm_logits(params, cfg, hidden), aux
+
+
+def xent_loss(logits, labels):
+    """Vocab-sharding-safe cross entropy: logsumexp + one-hot einsum only
+    (partial reduce + all-reduce under SPMD; the unsharded (T, V) logits are
+    never materialized)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(logits * oh, axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(params, cfg: ArchConfig, batch, *, window=None, remat=True,
+            remat_policy="full"):
+    logits, aux = lm_forward(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), window=window,
+                             remat=remat, remat_policy=remat_policy)
+    loss = xent_loss(logits, batch["labels"])
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Stacked per-layer decode state. Exactly one of kv/ssm/rwkv is used per
+    family; hybrid uses ssm + shared_kv (one KV cache per shared-block call)."""
+    kv: Optional[Any] = None          # KVCache with (L, B, S, K, h) leaves
+    rwkv: Optional[Any] = None        # RWKV6State with (L, ...) leaves
+    ssm: Optional[Any] = None         # Mamba2State with (L, ...) leaves
+    shared_kv: Optional[Any] = None   # KVCache with (n_seg, B, S, K, h) leaves
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
+    if cfg.family == "ssm":
+        st = init_rwkv6_state(batch, cfg.d_model, cfg.ssm.head_dim, cfg.dtype)
+        return DecodeCache(rwkv=jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), st))
+    if cfg.family == "hybrid":
+        st = init_mamba2_state(batch, cfg.d_model, state_dim=cfg.ssm.state_dim,
+                               head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand,
+                               conv_width=cfg.ssm.conv_width, dtype=cfg.dtype)
+        nseg = len(_segment_bounds(cfg))
+        kv = init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, cfg.dtype)
+        return DecodeCache(
+            ssm=jax.tree.map(lambda a: jnp.broadcast_to(
+                a[None], (cfg.n_layers,) + a.shape), st),
+            shared_kv=jax.tree.map(lambda a: jnp.broadcast_to(
+                a[None], (nseg,) + a.shape), kv))
+    kv = init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, cfg.dtype)
+    return DecodeCache(kv=jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), kv))
+
+
+def _attn_block_decode(lp, x, kv: KVCache, cfg: ArchConfig, dtype):
+    """x: (B, D) one token through one attention block."""
+    xs = x[:, None, :]
+    h, new_kv = attention_decode(lp["attn"], _norm(cfg, lp["ln1"], xs), kv,
+                                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                                 head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                                 dtype=dtype)
+    x = x + h[:, 0]
+    xn = _norm(cfg, lp["ln2"], x[:, None, :])
+    if cfg.moe is not None:
+        y, _ = moe_apply(lp["moe"], xn.reshape(1, x.shape[0], -1), cfg.moe,
+                         cfg.act, cfg.d_ff, dtype=dtype)
+        y = y.reshape(x.shape)
+    else:
+        y = ffn_apply(lp["ffn"], xn, cfg.act, dtype=dtype)[:, 0]
+    return x + y, new_kv
+
+
+def lm_decode_step(params, cfg: ArchConfig, cache: DecodeCache, token,
+                   embeds=None):
+    """One decode step. token: (B,) int32 (or embeds (B, D)). Returns
+    (logits (B, V), new_cache)."""
+    dtype = cfg.dtype
+    x = params["embed"][token].astype(dtype) if embeds is None else embeds.astype(dtype)
+
+    if cfg.family == "ssm":
+        def body(carry, lp_state):
+            lp, st = lp_state
+            y, new_st = rwkv6_block_step(lp, carry, st,
+                                         head_dim=cfg.ssm.head_dim, dtype=dtype)
+            return y, new_st
+        x, new_rwkv = jax.lax.scan(body, x, (params["layers"], cache.rwkv))
+        new_cache = DecodeCache(rwkv=new_rwkv)
+    elif cfg.family == "hybrid":
+        new_ssm_segs, new_kv_segs = [], []
+        bounds = _segment_bounds(cfg)
+        for seg_i, (lo, hi) in enumerate(bounds):
+            lp_seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+            st_seg = jax.tree.map(lambda a: a[lo:hi], cache.ssm)
+
+            def body(carry, lp_state):
+                lp, st = lp_state
+                y, new_st = mamba2_block_step(
+                    lp, carry, st, state_dim=cfg.ssm.state_dim,
+                    head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand, dtype=dtype)
+                return y, new_st
+            x, new_st_seg = jax.lax.scan(body, x, (lp_seg, st_seg))
+            new_ssm_segs.append(new_st_seg)
+            kv = jax.tree.map(lambda a: a[seg_i], cache.shared_kv)
+            x, new_kv = _attn_block_decode(params["shared"], x, kv,
+                                           cfg.with_(moe=None), dtype)
+            new_kv_segs.append(new_kv)
+        new_cache = DecodeCache(
+            ssm=jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm_segs),
+            shared_kv=jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_kv_segs))
+    else:
+        def body(carry, lp_kv):
+            lp, kv = lp_kv
+            y, new_kv = _attn_block_decode(lp, carry, kv, cfg, dtype)
+            return y, new_kv
+        x, new_kv = jax.lax.scan(body, x, (params["layers"], cache.kv))
+        new_cache = DecodeCache(kv=new_kv)
+
+    x = _norm(cfg, params["final_norm"], x[:, None, :])
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD) block — the state-space layer of zamba2 (arXiv:2411.15242).
+
+in_proj -> [z gate | x | B | C | dt]; short causal depthwise conv over
+(x,B,C); scalar-per-head decay a_t = exp(-softplus(A_log)·dt_t); SSD core via
+the shared chunked linear-attention engine (mode='ssm': C as q, B as k,
+dt-scaled x as v); skip D·x; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.distributed import shard_hidden
+from repro.models.linear_attention import (chunked_linear_attention,
+                                           linear_attention_step)
+
+
+def init_mamba2_block(key, d_model: int, *, state_dim: int = 64,
+                      head_dim: int = 64, expand: int = 2, conv_width: int = 4,
+                      dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * state_dim          # x, B, C share the conv
+    ks = iter(jax.random.split(key, 8))
+    proj_out = 2 * d_inner + 2 * state_dim + n_heads
+    return {
+        "norm": nn.init_rmsnorm(d_model, dtype),
+        "in_proj": nn.normal(next(ks), (d_model, proj_out), 0.02, dtype),
+        "conv_w": nn.normal(next(ks), (conv_width, conv_ch), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((n_heads,), dtype),             # softplus -> ~0.69
+        "dt_bias": jnp.full((n_heads,), -2.0, dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "gate_norm": nn.init_rmsnorm(d_inner, dtype),
+        "out_proj": nn.normal(next(ks), (d_inner, d_model), 0.02, dtype),
+    }
+
+
+def _split_proj(p, xn, d_model, state_dim, head_dim, expand, dtype):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    proj = xn @ p["in_proj"].astype(dtype)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * state_dim], axis=-1)
+    return z, xbc, dt, d_inner, n_heads
+
+
+def _causal_depthwise_conv(xbc, w, b, *, carry=None):
+    """xbc: (B, S, C); w: (K, C). Causal depthwise conv, SiLU activation.
+
+    carry: (B, K-1, C) previous inputs for decode-style continuation."""
+    kw = w.shape[0]
+    pad = carry if carry is not None else jnp.zeros(
+        (xbc.shape[0], kw - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(kw))
+    return jax.nn.silu(out + b.astype(xbc.dtype)), xp[:, -(kw - 1):]
+
+
+def mamba2_block(p, x, *, state_dim: int = 64, head_dim: int = 64,
+                 expand: int = 2, chunk: int = 128, dtype=None,
+                 initial_state=None, return_state=False):
+    dtype = dtype or x.dtype
+    b, s, d_model = x.shape
+    xn = nn.rmsnorm_apply(p["norm"], x)
+    z, xbc, dt, d_inner, n_heads = _split_proj(p, xn, d_model, state_dim,
+                                               head_dim, expand, dtype)
+    xbc, _ = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + state_dim], axis=-1)
+    xs = shard_hidden(xs, "batch", None, "ffn")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    log_decay = (-jax.nn.softplus(p["A_log"].astype(jnp.float32)) * dt)
+    v = (xs.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+         * dt[..., None]).astype(dtype)
+    # B/C shared across heads (n_groups=1): broadcast
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, n_heads, state_dim))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, n_heads, state_dim))
+
+    y, state = chunked_linear_attention(
+        q, k, v, log_decay[..., None], chunk=chunk, mode="ssm",
+        per_channel=False, initial_state=initial_state)
+    y = y.astype(dtype) + p["D"].astype(dtype)[None, None, :, None] \
+        * xs.reshape(b, s, n_heads, head_dim)
+    y = y.reshape(b, s, d_inner)
+    y = nn.rmsnorm_apply(p["gate_norm"], y) * jax.nn.silu(z)
+    out = x + y @ p["out_proj"].astype(dtype)
+    return (out, state) if return_state else out
+
+
+def mamba2_block_chunk(p, x, state: "Mamba2State", *, state_dim=64,
+                       head_dim=64, expand=2, chunk: int = 128, dtype=None):
+    """Stateful block over a sequence segment (long-context chunked prefill).
+    Equivalent to one full pass when segments are chained (tested)."""
+    dtype = dtype or x.dtype
+    b, s, d_model = x.shape
+    xn = nn.rmsnorm_apply(p["norm"], x)
+    z, xbc, dt, d_inner, n_heads = _split_proj(p, xn, d_model, state_dim,
+                                               head_dim, expand, dtype)
+    xbc, new_conv = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"],
+                                           carry=state.conv)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    log_decay = -jax.nn.softplus(p["A_log"].astype(jnp.float32)) * dt
+    v = (xs.reshape(b, s, n_heads, head_dim).astype(jnp.float32)
+         * dt[..., None]).astype(dtype)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, n_heads, state_dim))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, n_heads, state_dim))
+    y, new_ssm = chunked_linear_attention(
+        q, k, v, log_decay[..., None], chunk=chunk, mode="ssm",
+        per_channel=False, initial_state=state.ssm)
+    y = y.astype(dtype) + p["D"].astype(dtype)[None, None, :, None] \
+        * xs.reshape(b, s, n_heads, head_dim)
+    y = y.reshape(b, s, d_inner)
+    y = nn.rmsnorm_apply(p["gate_norm"], y) * jax.nn.silu(z)
+    out = x + y @ p["out_proj"].astype(dtype)
+    return out, Mamba2State(ssm=new_ssm, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array         # (B, H, N, head_dim)
+    conv: jax.Array        # (B, K-1, conv_ch)
+
+
+def init_mamba2_state(batch, d_model, *, state_dim=64, head_dim=64, expand=2,
+                      conv_width=4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    h = d_inner // head_dim
+    return Mamba2State(
+        ssm=jnp.zeros((batch, h, state_dim, head_dim), jnp.float32),
+        conv=jnp.zeros((batch, conv_width - 1, d_inner + 2 * state_dim), dtype),
+    )
+
+
+def mamba2_block_step(p, x, state: Mamba2State, *, state_dim=64, head_dim=64,
+                      expand=2, dtype=None):
+    dtype = dtype or x.dtype
+    b, d_model = x.shape
+    xn = nn.rmsnorm_apply(p["norm"], x[:, None, :])
+    z, xbc, dt, d_inner, n_heads = _split_proj(p, xn, d_model, state_dim,
+                                               head_dim, expand, dtype)
+    xbc, new_conv = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"],
+                                           carry=state.conv)
+    xs, bmat, cmat = jnp.split(xbc[:, 0], [d_inner, d_inner + state_dim], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    log_decay = -jax.nn.softplus(p["A_log"].astype(jnp.float32)) * dt1
+    v = xs.reshape(b, n_heads, head_dim).astype(jnp.float32) * dt1[..., None]
+    k = jnp.broadcast_to(bmat[:, None, :], (b, n_heads, state_dim))
+    q = jnp.broadcast_to(cmat[:, None, :], (b, n_heads, state_dim))
+    y, new_ssm = linear_attention_step(q, k, v, log_decay[..., None],
+                                       state.ssm, mode="ssm")
+    y = y.astype(dtype) + p["D"].astype(dtype)[None, :, None] \
+        * xs.reshape(b, n_heads, head_dim)
+    y = y.reshape(b, d_inner)
+    y = nn.rmsnorm_apply(p["gate_norm"], y) * jax.nn.silu(z[:, 0])
+    out = x + y @ p["out_proj"].astype(dtype)
+    return out, Mamba2State(ssm=new_ssm, conv=new_conv)

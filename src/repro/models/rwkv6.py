@@ -1,0 +1,198 @@
+"""RWKV-6 (Finch) block — arXiv:2404.05892.
+
+Time mixing with data-dependent token-shift lerp (DDLerp, low-rank), data-
+dependent per-channel decay w_t = exp(-exp(w0 + lora(x))), per-head bonus u,
+and the wkv linear-attention recurrence (models/linear_attention.py).
+Channel mixing is the squared-ReLU token-shift MLP.
+
+Attention-free: train/prefill is the chunked scan, decode is O(1)/token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.distributed import shard_hidden
+from repro.models.linear_attention import (chunked_linear_attention,
+                                           linear_attention_step)
+
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def init_rwkv6_block(key, d_model: int, head_dim: int, *, lora_rank: int = 64,
+                     mix_rank: int = 32, d_ff: int | None = None,
+                     dtype=jnp.float32):
+    d_ff = d_ff or d_model * 7 // 2
+    n_heads = d_model // head_dim
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "ln1": nn.init_layernorm(d_model, dtype),
+        "ln2": nn.init_layernorm(d_model, dtype),
+        # DDLerp
+        "mu_x": jnp.zeros((d_model,), dtype),
+        "mu_base": jnp.zeros((5, d_model), dtype),
+        "mix_w1": nn.normal(next(ks), (d_model, 5 * mix_rank), 0.02, dtype),
+        "mix_w2": nn.normal(next(ks), (5, mix_rank, d_model), 0.02, dtype),
+        # projections
+        "wr": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+        "wk": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+        "wv": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+        "wg": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+        "wo": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+        # data-dependent decay
+        "w0": jnp.full((d_model,), -1.0, dtype),      # resting log(-log w)
+        "wd_a": nn.normal(next(ks), (d_model, lora_rank), 0.02, dtype),
+        "wd_b": nn.normal(next(ks), (lora_rank, d_model), 0.02, dtype),
+        "u": nn.normal(next(ks), (n_heads, head_dim), 0.1, dtype),
+        "ln_x": nn.init_layernorm(d_model, dtype),    # per-head group norm
+        # channel mixing
+        "cm_mu_k": jnp.full((d_model,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d_model,), 0.5, dtype),
+        "cm_wk": nn.normal(next(ks), (d_model, d_ff), 0.02, dtype),
+        "cm_wv": nn.normal(next(ks), (d_ff, d_model), 0.02, dtype),
+        "cm_wr": nn.normal(next(ks), (d_model, d_model), 0.02, dtype),
+    }
+    return p
+
+
+def _token_shift(x, last=None):
+    """x[t] -> x[t-1]; first position takes ``last`` (decode carry) or 0."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, prev[:, 1:]], axis=1)
+
+
+def _ddlerp(p, x, dx, dtype):
+    """Data-dependent lerp: five mixed inputs (r,k,v,g,w)."""
+    xxx = x + dx * p["mu_x"].astype(dtype)
+    lora = jnp.tanh(xxx @ p["mix_w1"].astype(dtype))
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, -1)
+    mus = p["mu_base"].astype(dtype) + jnp.einsum(
+        "bsfr,frd->bsfd", lora, p["mix_w2"].astype(dtype))
+    return [x + dx * mus[:, :, i, :] for i in range(5)]
+
+
+def _time_mix_qkvgw(p, x, dx, n_heads, head_dim, dtype):
+    b, s, d = x.shape
+    xr, xk, xv, xg, xw = _ddlerp(p, x, dx, dtype)
+    r = (xr @ p["wr"].astype(dtype)).reshape(b, s, n_heads, head_dim)
+    k = (xk @ p["wk"].astype(dtype)).reshape(b, s, n_heads, head_dim)
+    v = (xv @ p["wv"].astype(dtype)).reshape(b, s, n_heads, head_dim)
+    g = jax.nn.silu(xg @ p["wg"].astype(dtype))
+    dd = jnp.tanh(xw @ p["wd_a"].astype(dtype)) @ p["wd_b"].astype(dtype)
+    log_decay = -jnp.exp(p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+    log_decay = log_decay.reshape(b, s, n_heads, head_dim)
+    return r, k, v, g, log_decay
+
+
+def _time_mix_out(p, wkv, g, b, s, d, dtype):
+    y = nn.layernorm_apply(p["ln_x"], wkv.reshape(b, s, d).astype(dtype))
+    return (y * g) @ p["wo"].astype(dtype)
+
+
+def rwkv6_time_mix(p, x, *, head_dim: int, chunk: int = 16, dtype=None,
+                   initial_state=None, return_state=False):
+    dtype = dtype or x.dtype
+    b, s, d = x.shape
+    n_heads = d // head_dim
+    dx = _token_shift(x) - x
+    r, k, v, g, log_decay = _time_mix_qkvgw(p, x, dx, n_heads, head_dim, dtype)
+    wkv, state = chunked_linear_attention(
+        r, k, v, log_decay, bonus=p["u"], chunk=chunk, mode="rwkv",
+        initial_state=initial_state)
+    y = _time_mix_out(p, wkv.astype(dtype), g, b, s, d, dtype)
+    return (y, state) if return_state else y
+
+
+def rwkv6_channel_mix(p, x, *, dtype=None):
+    dtype = dtype or x.dtype
+    dx = _token_shift(x) - x
+    xk = x + dx * p["cm_mu_k"].astype(dtype)
+    xr = x + dx * p["cm_mu_r"].astype(dtype)
+    kv = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dtype)))
+    kv = shard_hidden(kv, "batch", None, "ffn")
+    kv = kv @ p["cm_wv"].astype(dtype)
+    return jax.nn.sigmoid(xr @ p["cm_wr"].astype(dtype)) * kv
+
+
+def rwkv6_block(p, x, *, head_dim: int, chunk: int = 16, dtype=None):
+    y = x + rwkv6_time_mix(p, nn.layernorm_apply(p["ln1"], x),
+                           head_dim=head_dim, chunk=chunk, dtype=dtype)
+    y = y + rwkv6_channel_mix(p, nn.layernorm_apply(p["ln2"], y), dtype=dtype)
+    return y
+
+
+def rwkv6_block_chunk(p, x, state: "RWKV6State", *, head_dim: int,
+                      chunk: int = 16, dtype=None):
+    """Stateful block over a sequence segment — long-context chunked prefill.
+
+    x: (B, L, D) one segment; ``state`` carries the wkv state and the last
+    token of the previous segment for both token shifts. Segment-chained
+    results are exactly equal to one full-sequence pass (tests assert this).
+    """
+    dtype = dtype or x.dtype
+    b, s, d = x.shape
+    n_heads = d // head_dim
+    xn = nn.layernorm_apply(p["ln1"], x)
+    dx = _token_shift(xn, last=state.last_tm) - xn
+    r, k, v, g, log_decay = _time_mix_qkvgw(p, xn, dx, n_heads, head_dim, dtype)
+    wkv, new_wkv = chunked_linear_attention(
+        r, k, v, log_decay, bonus=p["u"], chunk=chunk, mode="rwkv",
+        initial_state=state.wkv)
+    y = x + _time_mix_out(p, wkv.astype(dtype), g, b, s, d, dtype)
+    yn = nn.layernorm_apply(p["ln2"], y)
+    dxc = _token_shift(yn, last=state.last_cm) - yn
+    xk = yn + dxc * p["cm_mu_k"].astype(dtype)
+    xr = yn + dxc * p["cm_mu_r"].astype(dtype)
+    kv = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dtype))) @ p["cm_wv"].astype(dtype)
+    y = y + jax.nn.sigmoid(xr @ p["cm_wr"].astype(dtype)) * kv
+    new_state = RWKV6State(wkv=new_wkv, last_tm=xn[:, -1], last_cm=yn[:, -1])
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent state: wkv state + two token-shift carries)
+# ---------------------------------------------------------------------------
+
+class RWKV6State(NamedTuple):
+    wkv: jax.Array         # (B, H, dk, dv)
+    last_tm: jax.Array     # (B, D) token-shift carry, time mixing
+    last_cm: jax.Array     # (B, D) token-shift carry, channel mixing
+
+
+def init_rwkv6_state(batch, d_model, head_dim, dtype=jnp.float32):
+    h = d_model // head_dim
+    return RWKV6State(
+        wkv=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        last_tm=jnp.zeros((batch, d_model), dtype),
+        last_cm=jnp.zeros((batch, d_model), dtype),
+    )
+
+
+def rwkv6_block_step(p, x, state: RWKV6State, *, head_dim: int, dtype=None):
+    """x: (B, D) one token. Returns (y (B, D), new_state)."""
+    dtype = dtype or x.dtype
+    b, d = x.shape
+    n_heads = d // head_dim
+    xs = x[:, None, :]
+
+    xn = nn.layernorm_apply(p["ln1"], xs)
+    dx = state.last_tm[:, None, :] - xn
+    r, k, v, g, log_decay = _time_mix_qkvgw(p, xn, dx, n_heads, head_dim, dtype)
+    wkv, new_wkv = linear_attention_step(
+        r[:, 0], k[:, 0], v[:, 0], log_decay[:, 0], state.wkv,
+        bonus=p["u"], mode="rwkv")
+    y = x + _time_mix_out(p, wkv[:, None].astype(dtype), g, b, 1, d, dtype)[:, 0]
+    new_last_tm = xn[:, 0]
+
+    yn = nn.layernorm_apply(p["ln2"], y[:, None, :])
+    dxc = state.last_cm[:, None, :] - yn
+    xk = yn + dxc * p["cm_mu_k"].astype(dtype)
+    xr = yn + dxc * p["cm_mu_r"].astype(dtype)
+    kv = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dtype))) @ p["cm_wv"].astype(dtype)
+    y = y + (jax.nn.sigmoid(xr @ p["cm_wr"].astype(dtype)) * kv)[:, 0]
+    return y, RWKV6State(wkv=new_wkv, last_tm=new_last_tm, last_cm=yn[:, 0])

@@ -1,0 +1,263 @@
+"""Minimal functional NN substrate (no flax/haiku dependency).
+
+Params are plain pytrees (nested dicts of jnp arrays). Every layer is a pair of
+pure functions: ``init_*(key, ...) -> params`` and ``*_apply(params, x) -> y``.
+Initializers follow standard fan-in scaling. All layers accept a ``dtype``
+(compute dtype); params are stored in ``param_dtype``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def he_normal(key, shape, fan_in, dtype=jnp.float32):
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_normal(key, shape, fan_in, dtype=jnp.float32):
+    std = math.sqrt(1.0 / max(fan_in, 1))
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def normal(key, shape, std=0.02, dtype=jnp.float32):
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim, out_dim, *, bias=True, dtype=jnp.float32, std=None):
+    kw, kb = jax.random.split(key)
+    if std is None:
+        w = lecun_normal(kw, (in_dim, out_dim), in_dim, dtype)
+    else:
+        w = normal(kw, (in_dim, out_dim), std, dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (NHWC, HWIO kernels)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, in_ch, out_ch, ksize, *, bias=True, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    fan_in = in_ch * ksize * ksize
+    p = {"w": he_normal(kw, (ksize, ksize, in_ch, out_ch), fan_in, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv_apply(p, x, *, stride=1, padding="SAME", dtype=None):
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def conv_transpose_apply(p, x, *, stride=2, dtype=None):
+    """Transposed conv (×stride upsampling), NHWC/HWIO."""
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = jax.lax.conv_transpose(
+        x, w,
+        strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (inference-style: apply with stored statistics; training variant
+# returns batch stats so the caller can maintain EMA)
+# ---------------------------------------------------------------------------
+
+def init_batchnorm(ch, dtype=jnp.float32):
+    return {
+        "scale": jnp.ones((ch,), dtype),
+        "bias": jnp.zeros((ch,), dtype),
+        "mean": jnp.zeros((ch,), dtype),
+        "var": jnp.ones((ch,), dtype),
+    }
+
+
+def batchnorm_apply(p, x, *, eps=1e-5):
+    """Inference BN over the trailing channel dim (NHWC or N...C)."""
+    inv = jax.lax.rsqrt(p["var"].astype(x.dtype) + eps)
+    return (x - p["mean"].astype(x.dtype)) * inv * p["scale"].astype(x.dtype) \
+        + p["bias"].astype(x.dtype)
+
+
+def batchnorm_inverse(p, z, *, eps=1e-5):
+    """Invert inference BN: recover the pre-BN value from the BN output.
+
+    BaF backward prediction starts with exactly this (paper §3.3). Channels
+    with |scale| ~ 0 are non-invertible; we guard with a floor.
+    """
+    scale = p["scale"].astype(z.dtype)
+    safe = jnp.where(jnp.abs(scale) < 1e-6, 1e-6, scale)
+    std = jnp.sqrt(p["var"].astype(z.dtype) + eps)
+    return (z - p["bias"].astype(z.dtype)) / safe * std + p["mean"].astype(z.dtype)
+
+
+def batchnorm_train_apply(p, x, *, eps=1e-5, momentum=0.97):
+    """Training BN: normalize by batch stats, return (y, new_params_with_ema)."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axes)
+    var = jnp.var(x, axes)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * inv * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    new_p = dict(p)
+    new_p["mean"] = (momentum * p["mean"] + (1 - momentum) * mean).astype(p["mean"].dtype)
+    new_p["var"] = (momentum * p["var"] + (1 - momentum) * var).astype(p["var"].dtype)
+    return y, new_p
+
+
+# ---------------------------------------------------------------------------
+# Norms for transformer stacks
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps=1e-6):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(orig)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_lowmem(scale, x, eps):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)) \
+        .astype(x.dtype)
+
+
+def _rmsnorm_lowmem_fwd(scale, x, eps):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    y = (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+    return y, (scale, x, inv.astype(jnp.float32))
+
+
+def _rmsnorm_lowmem_bwd(eps, res, g):
+    """Cotangents stay in the INPUT dtype (bf16): the only fp32 tensors are
+    the per-row statistics. Halves the dominant bwd-pass HBM traffic of the
+    default fp32-cast rmsnorm (EXPERIMENTS.md §Perf HC1 it5)."""
+    scale, x, inv = res
+    gs = (g * scale.astype(g.dtype)).astype(x.dtype)       # (B,S,D) bf16
+    # row stat in fp32: sum(g*scale*x) / (D * rms^2)
+    dot = jnp.sum(gs.astype(jnp.float32) * x.astype(jnp.float32),
+                  axis=-1, keepdims=True)
+    n = x.shape[-1]
+    coef = (dot * inv * inv / n).astype(x.dtype)           # (B,S,1)
+    dx = ((gs.astype(jnp.float32) - coef.astype(jnp.float32)
+           * x.astype(jnp.float32)) * inv).astype(x.dtype)
+    dscale = jnp.sum((g.astype(jnp.float32)
+                      * (x.astype(jnp.float32) * inv)),
+                     axis=tuple(range(x.ndim - 1))).astype(scale.dtype)
+    return dscale, dx
+
+
+_rmsnorm_lowmem.defvjp(_rmsnorm_lowmem_fwd, _rmsnorm_lowmem_bwd)
+
+
+def rmsnorm_lowmem_apply(p, x, *, eps=1e-6):
+    """rmsnorm with bf16 cotangents (fp32 row stats only)."""
+    return _rmsnorm_lowmem(p["scale"], x, eps)
+
+
+def init_layernorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps=1e-5):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def leaky_relu(x, alpha=0.1):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def init_prelu(ch, dtype=jnp.float32, init=0.25):
+    return {"alpha": jnp.full((ch,), init, dtype)}
+
+
+def prelu_apply(p, x):
+    a = p["alpha"].astype(x.dtype)
+    return jnp.where(x >= 0, x, a * x)
+
+
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

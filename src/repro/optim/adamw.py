@@ -1,0 +1,91 @@
+"""AdamW, implemented directly on pytrees (no optax).
+
+State is a pytree congruent with the params, so ZeRO-style sharding is just
+"shard the state with the same PartitionSpec as the param" — the distributed
+layer (distributed/sharding.py) relies on this congruence.
+
+Moments are kept in fp32 regardless of param dtype (mixed-precision master
+strategy lives in train/trainer.py, which keeps fp32 master params and casts
+to bf16 for the forward).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # params matching this predicate (path, leaf) are excluded from decay
+    decay_mask: Optional[Callable[[tuple, Any], bool]] = None
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def _default_decay_mask(path, leaf) -> bool:
+    """Decay matrices; skip vectors/scalars (norms, biases, BN, PReLU)."""
+    return leaf.ndim >= 2
+
+
+def adamw_update(grads, state: AdamWState, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd_mu(g, mu):
+        return cfg.b1 * mu + (1 - cfg.b1) * g.astype(jnp.float32)
+
+    def upd_nu(g, nu):
+        return cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32))
+
+    mu = jax.tree.map(upd_mu, grads, state.mu)
+    nu = jax.tree.map(upd_nu, grads, state.nu)
+
+    mask_fn = cfg.decay_mask or _default_decay_mask
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    decay_flags = [mask_fn(p, leaf) for p, leaf in paths]
+    flags_tree = jax.tree.unflatten(jax.tree.structure(params), decay_flags)
+
+    def upd_p(p, m, v, decay):
+        step = m / b1c / (jnp.sqrt(v / b2c) + cfg.eps)
+        if decay and cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd_p, params, mu, nu, flags_tree)
+    return new_params, AdamWState(count=count, mu=mu, nu=nu), metrics

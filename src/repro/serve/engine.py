@@ -1,0 +1,197 @@
+"""Serving steps: prefill, single-token decode, and chunked long-context
+ingestion (the long_500k path for SSM/hybrid archs).
+
+All entry points are pure jit-able functions — launch/dryrun.py lowers them
+with ShapeDtypeStruct inputs, and examples/serve_lm.py runs them for real at
+smoke scale.
+
+Long-context ingestion processes the sequence in blocks (outer lax.scan) so
+peak activation memory is O(block), not O(S): per block, embed -> scan layers
+carrying recurrent state (RWKV6State / Mamba2State stacked over layers) ->
+for zamba2, the shared attention block runs windowed attention against the
+previous block's K/V (window == block size). Returns final states + last
+logits — ready to start decoding at position S.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.distributed import shard_hidden
+from repro.models.attention import apply_rope, rope_freqs
+from repro.models.encdec import (encdec_decode_step, encode, decode_train,
+                                 init_encdec_cache)
+from repro.models.lm import (DecodeCache, _norm, _segment_bounds,
+                             init_decode_cache, lm_decode_step, lm_forward,
+                             lm_logits)
+from repro.models.mamba2 import init_mamba2_state, mamba2_block_chunk
+from repro.models.rwkv6 import init_rwkv6_state, rwkv6_block_chunk
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (all families)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig):
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            enc_out = encode(params, cfg, batch["audio_embeds"])
+            return decode_train(params, cfg, batch["tokens"], enc_out)
+        return prefill
+
+    def prefill(params, batch):
+        logits, _ = lm_forward(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"), remat=False)
+        return logits
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    if cfg.family == "audio":
+        def step(params, cache, token):
+            return encdec_decode_step(params, cfg, cache, token)
+        return step
+
+    def step(params, cache, token):
+        return lm_decode_step(params, cfg, cache, token)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Long-context chunked ingestion (ssm / hybrid)
+# ---------------------------------------------------------------------------
+
+class LongState(NamedTuple):
+    layer_states: Any        # stacked (L, ...) RWKV6State / Mamba2State
+    shared_k: Any = None     # (n_seg, B, W, K, hd) zamba2 windowed-attn carry
+    shared_v: Any = None
+    block_idx: jax.Array = None
+
+
+def init_long_state(cfg: ArchConfig, batch: int, block: int) -> LongState:
+    if cfg.family == "ssm":
+        st = init_rwkv6_state(batch, cfg.d_model, cfg.ssm.head_dim, cfg.dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+        return LongState(layer_states=stacked,
+                         block_idx=jnp.zeros((), jnp.int32))
+    st = init_mamba2_state(batch, cfg.d_model, state_dim=cfg.ssm.state_dim,
+                           head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand,
+                           conv_width=cfg.ssm.conv_width, dtype=cfg.dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+    nseg = len(_segment_bounds(cfg))
+    kvshape = (nseg, batch, block, cfg.n_kv_heads, cfg.hd)
+    return LongState(layer_states=stacked,
+                     shared_k=jnp.zeros(kvshape, cfg.dtype),
+                     shared_v=jnp.zeros(kvshape, cfg.dtype),
+                     block_idx=jnp.zeros((), jnp.int32))
+
+
+def _shared_attn_windowed(lp, cfg: ArchConfig, x, prev_k, prev_v, positions,
+                          first_block):
+    """Shared zamba2 block over one sequence block with carry-in window KV."""
+    dtype = cfg.dtype
+    b, w, d = x.shape
+    xn = _norm(cfg, lp["ln1"], x)
+    q = (xn @ lp["attn"]["wq"].astype(dtype)).reshape(b, w, cfg.n_heads, cfg.hd)
+    k = (xn @ lp["attn"]["wk"].astype(dtype)).reshape(b, w, cfg.n_kv_heads, cfg.hd)
+    v = (xn @ lp["attn"]["wv"].astype(dtype)).reshape(b, w, cfg.n_kv_heads, cfg.hd)
+    cos, sin = rope_freqs(cfg.hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    k2 = jnp.concatenate([prev_k, k], axis=1)           # (B, 2W, K, hd)
+    v2 = jnp.concatenate([prev_v, v], axis=1)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, w, cfg.n_kv_heads, g, cfg.hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k2.astype(jnp.float32)) / jnp.sqrt(cfg.hd)
+    qpos = jnp.arange(w)[:, None] + w
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - w)
+    mask = jnp.where(first_block, mask & (kpos >= w), mask)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v2.astype(jnp.float32))
+    out = out.reshape(b, w, cfg.n_heads * cfg.hd).astype(dtype)
+    x = x + out @ lp["attn"]["wo"].astype(dtype)
+    from repro.models.ffn import ffn_apply
+    x = x + ffn_apply(lp["ffn"], _norm(cfg, lp["ln2"], x), cfg.act, dtype=dtype)
+    return x, k, v
+
+
+def make_long_ingest(cfg: ArchConfig, *, block: int = 8192):
+    """Returns ingest(params, tokens (B, S)) -> (last_logits (B, V), LongState).
+
+    S must be a multiple of ``block``; for zamba2, block must equal the
+    long-context attention window so the carry covers exactly one window.
+    """
+    assert cfg.family in ("ssm", "hybrid"), "long ingestion is sub-quadratic only"
+
+    def ingest(params, tokens):
+        b, s = tokens.shape
+        nblocks = s // block
+        state0 = init_long_state(cfg, b, block)
+        tok_blocks = tokens.reshape(b, nblocks, block).transpose(1, 0, 2)
+
+        def outer(carry, tok_blk):
+            st: LongState = carry
+            x = params["embed"][tok_blk].astype(cfg.dtype)
+            x = shard_hidden(x, "batch", None, "act_hidden")
+
+            if cfg.family == "ssm":
+                def layer_body(xc, lp_state):
+                    lp, lst = lp_state
+                    y, new_lst = rwkv6_block_chunk(
+                        lp, xc, lst, head_dim=cfg.ssm.head_dim,
+                        chunk=cfg.ssm.chunk, dtype=cfg.dtype)
+                    return y, new_lst
+                layer_body = jax.checkpoint(
+                    layer_body, policy=jax.checkpoint_policies.nothing_saveable)
+                x, new_states = jax.lax.scan(
+                    layer_body, x, (params["layers"], st.layer_states))
+                new_st = LongState(layer_states=new_states,
+                                   block_idx=st.block_idx + 1)
+            else:
+                new_seg_states, new_ks, new_vs = [], [], []
+                first = st.block_idx == 0
+                positions = st.block_idx * block + jnp.arange(block)
+                for seg_i, (lo, hi) in enumerate(_segment_bounds(cfg)):
+                    lp_seg = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                    st_seg = jax.tree.map(lambda a: a[lo:hi], st.layer_states)
+
+                    def layer_body(xc, lp_state):
+                        lp, lst = lp_state
+                        y, new_lst = mamba2_block_chunk(
+                            lp, xc, lst, state_dim=cfg.ssm.state_dim,
+                            head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand,
+                            chunk=cfg.ssm.chunk, dtype=cfg.dtype)
+                        return y, new_lst
+                    layer_body = jax.checkpoint(
+                        layer_body,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                    x, new_st_seg = jax.lax.scan(layer_body, x, (lp_seg, st_seg))
+                    new_seg_states.append(new_st_seg)
+                    x, nk, nv = _shared_attn_windowed(
+                        params["shared"], cfg, x, st.shared_k[seg_i],
+                        st.shared_v[seg_i], positions, first)
+                    new_ks.append(nk)
+                    new_vs.append(nv)
+                new_st = LongState(
+                    layer_states=jax.tree.map(
+                        lambda *xs: jnp.concatenate(xs, 0), *new_seg_states),
+                    shared_k=jnp.stack(new_ks, 0), shared_v=jnp.stack(new_vs, 0),
+                    block_idx=st.block_idx + 1)
+            last_hidden = _norm(cfg, params["final_norm"], x[:, -1:, :])
+            logits = lm_logits(params, cfg, last_hidden)[:, 0]
+            return new_st, logits
+
+        final_state, logits_all = jax.lax.scan(outer, state0, tok_blocks)
+        return logits_all[-1], final_state
+
+    return ingest

@@ -1,0 +1,158 @@
+"""Tier-A training: (1) pretrain the CNN on the detection-proxy task,
+(2) offline channel-selection statistics, (3) train the BaF predictor with the
+original network FROZEN — exactly the paper's protocol (§4):
+
+  * inputs to the BaF net are the *dequantized quantized* selected channels
+    (quantization in the loop, per-example side info),
+  * target is the post-activation tensor Y = sigma(Z) of the split layer,
+  * loss is the Charbonnier penalty (eq. 7), eps = 1e-3,
+  * consolidation (eq. 6) is ignored during training,
+  * no gradient ever reaches the original network weights.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.baf import BaFConvConfig, baf_conv_predict, init_baf_conv
+from repro.core.losses import charbonnier
+from repro.core.quant import compute_quant_params, dequantize, quantize
+from repro.core.selection import correlation_matrix_conv, select_channels
+from repro.data.synthetic import ShapesDatasetConfig, shapes_batch_iterator
+from repro.models.cnn import CNNConfig, cnn_cloud, cnn_edge, cnn_forward, cnn_forward_train, init_cnn
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_with_warmup
+
+
+# ---------------------------------------------------------------------------
+# 1. CNN pretraining (stand-in for darknet COCO weights — DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def pretrain_cnn(cnn_cfg: CNNConfig, data_cfg: ShapesDatasetConfig, *,
+                 steps: int = 400, lr: float = 3e-3, seed: int = 0,
+                 log_every: int = 100, verbose: bool = True):
+    key = jax.random.PRNGKey(seed)
+    params = init_cnn(key, cnn_cfg)
+    opt = adamw_init(params)
+    sched = cosine_with_warmup(lr, steps // 10, steps)
+    ocfg = AdamWConfig(weight_decay=1e-4)
+
+    @jax.jit
+    def step_fn(params, opt, step, img, labels):
+        def loss_fn(p):
+            logits, new_p = cnn_forward_train(p, img)
+            ll = jax.nn.log_softmax(logits)
+            loss = -jnp.mean(jnp.take_along_axis(ll, labels[:, None], 1))
+            acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+            return loss, (acc, new_p)
+        (loss, (acc, new_p)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # BN EMA stats come back through new_p; trainable update via AdamW
+        new_params, new_opt, _ = adamw_update(grads, opt, params, sched(step), ocfg)
+        # keep the EMA'd BN running stats from the train-mode forward
+        def merge(path, a, b):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            return b if name in ("mean", "var") else a
+        merged = jax.tree_util.tree_map_with_path(merge, new_params, new_p)
+        return merged, new_opt, loss, acc
+
+    it = shapes_batch_iterator(data_cfg, seed=seed + 1)
+    hist = []
+    for s in range(steps):
+        img, labels = next(it)
+        params, opt, loss, acc = step_fn(params, opt, jnp.asarray(s), img, labels)
+        if s % log_every == 0 or s == steps - 1:
+            hist.append((s, float(loss), float(acc)))
+            if verbose:
+                print(f"  [cnn-pretrain] step {s:4d} loss {float(loss):.4f} acc {float(acc):.3f}")
+    return params, hist
+
+
+def eval_cnn(params, data_cfg: ShapesDatasetConfig, *, batches: int = 20, seed: int = 10_000):
+    fwd = jax.jit(cnn_forward)
+    it = shapes_batch_iterator(data_cfg, seed=seed)
+    accs = []
+    for _ in range(batches):
+        img, labels = next(it)
+        accs.append(float(jnp.mean(jnp.argmax(fwd(params, img), -1) == labels)))
+    return float(np.mean(accs))
+
+
+# ---------------------------------------------------------------------------
+# 2. Offline channel selection (paper: 1k COCO images; here: n batches)
+# ---------------------------------------------------------------------------
+
+def compute_channel_order(params, data_cfg: ShapesDatasetConfig, *,
+                          batches: int = 16, seed: int = 999):
+    edge = jax.jit(lambda p, img: cnn_edge(p, img))
+    it = shapes_batch_iterator(data_cfg, seed=seed)
+    acc = None
+    for _ in range(batches):
+        img, _ = next(it)
+        x_in, z = edge(params, img)
+        r = correlation_matrix_conv(z, x_in)
+        acc = r if acc is None else acc + r
+    return select_channels(acc / batches)
+
+
+# ---------------------------------------------------------------------------
+# 3. BaF predictor training (frozen original network)
+# ---------------------------------------------------------------------------
+
+class BaFTrainResult(NamedTuple):
+    baf_params: dict
+    sel_idx: np.ndarray
+    losses: list
+
+
+def make_baf_loss(cnn_params, sel_idx, bits: int):
+    """Charbonnier loss of sigma(Z_tilde) vs sigma(Z), quantization in the loop."""
+    sel = jnp.asarray(sel_idx, jnp.int32)
+    split = cnn_params["split"]
+
+    def loss_fn(baf_params, z):
+        y_target = nn.leaky_relu(z)                       # sigma(Z): paper's Y
+        z_sel = z[..., sel]
+        qp = compute_quant_params(z_sel, bits, per_example=True)
+        z_hat_sel = dequantize(quantize(z_sel, qp), qp)   # decoder sees this
+        z_tilde = baf_conv_predict(baf_params, split["conv"], split["bn"],
+                                   sel, z_hat_sel)        # no consolidation (§4)
+        return charbonnier(nn.leaky_relu(z_tilde), y_target)
+
+    return loss_fn
+
+
+def train_baf(cnn_params, cnn_cfg: CNNConfig, data_cfg: ShapesDatasetConfig,
+              sel_idx, *, bits: int = 8, hidden: int = 64, steps: int = 600,
+              lr: float = 2e-3, seed: int = 42, log_every: int = 200,
+              verbose: bool = True) -> BaFTrainResult:
+    c = len(sel_idx)
+    bcfg = BaFConvConfig(c=c, q=cnn_cfg.split_q, hidden=hidden)
+    baf_params = init_baf_conv(jax.random.PRNGKey(seed), bcfg)
+    opt = adamw_init(baf_params)
+    sched = cosine_with_warmup(lr, max(steps // 20, 1), steps)
+    ocfg = AdamWConfig(weight_decay=0.0)   # small predictor; paper uses none
+    loss_fn = make_baf_loss(cnn_params, sel_idx, bits)
+    edge = jax.jit(lambda img: cnn_edge(cnn_params, img)[1])
+
+    @jax.jit
+    def step_fn(baf_params, opt, step, z):
+        loss, grads = jax.value_and_grad(loss_fn)(baf_params, z)
+        new_bp, new_opt, _ = adamw_update(grads, opt, baf_params, sched(step), ocfg)
+        return new_bp, new_opt, loss
+
+    it = shapes_batch_iterator(data_cfg, seed=seed + 7)
+    losses = []
+    for s in range(steps):
+        img, _ = next(it)
+        z = edge(img)                      # frozen original network
+        baf_params, opt, loss = step_fn(baf_params, opt, jnp.asarray(s), z)
+        if s % log_every == 0 or s == steps - 1:
+            losses.append((s, float(loss)))
+            if verbose:
+                print(f"  [baf C={c} n={bits}] step {s:4d} charbonnier {float(loss):.5f}")
+    return BaFTrainResult(baf_params=baf_params, sel_idx=np.asarray(sel_idx),
+                          losses=losses)

@@ -1,0 +1,89 @@
+"""Fault-tolerance policy for 1000+-node synchronous training.
+
+What is implemented and testable here on one host:
+  * atomic checkpoint / newest-complete restore / retention (checkpoint.py)
+  * auto-resume: launch/train.py restores the latest step and the data
+    pipeline is a pure function of (seed, step), so a restarted job replays
+    the exact batch sequence (tests/test_checkpoint.py asserts bit-identical
+    losses after a simulated preemption)
+  * elastic scaling: checkpoints are mesh-agnostic; restore reshards onto the
+    current mesh (pod count is a config, not baked into the checkpoint)
+  * a watchdog harness (below) that wraps the step function with a deadline
+    and converts hangs into clean preemptions (single-host analogue of the
+    straggler escape hatch).
+
+Design notes for the real cluster (documented, not simulatable on CPU):
+  * node failure: jax.distributed heartbeats surface as a collective error;
+    the runner traps it, the scheduler replaces the node, all hosts restart
+    from the latest complete checkpoint (bounded loss = ckpt interval).
+  * stragglers: synchronous SPMD cannot drop a slow worker mid-step; the
+    mitigations are (a) checkpoint-interval bounding, (b) per-step deadline
+    watchdog that forces the restart path when a step exceeds k x median
+    (the watchdog below), (c) data-pipeline prefetch so input skew never
+    stalls the collective.
+  * the compressed cross-pod all-reduce (optim/grad_compress.py) shrinks the
+    DCN phase — the phase with the highest straggler variance.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class StepDeadlineExceeded(RuntimeError):
+    pass
+
+
+@dataclass
+class Watchdog:
+    """Per-step deadline: k x running-median wall time (min_floor seconds).
+
+    Call ``guard(fn)`` around the blocking step; on overrun raises
+    StepDeadlineExceeded, which launch/train.py turns into
+    checkpoint-and-exit (the cluster runner then reschedules).
+    SIGALRM-based — single-host dev harness; the cluster version uses the
+    runner's external heartbeat instead.
+    """
+    factor: float = 5.0
+    min_floor: float = 30.0
+    history: list = field(default_factory=list)
+
+    def _deadline(self) -> float:
+        if not self.history:
+            return max(self.min_floor, 300.0)
+        med = sorted(self.history)[len(self.history) // 2]
+        return max(self.min_floor, self.factor * med)
+
+    def guard(self, fn: Callable, *args, **kwargs):
+        deadline = self._deadline()
+
+        def _raise(signum, frame):
+            raise StepDeadlineExceeded(f"step exceeded {deadline:.1f}s")
+
+        old = signal.signal(signal.SIGALRM, _raise)
+        signal.setitimer(signal.ITIMER_REAL, deadline)
+        t0 = time.monotonic()
+        try:
+            out = fn(*args, **kwargs)
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, old)
+        self.history.append(time.monotonic() - t0)
+        if len(self.history) > 64:
+            self.history.pop(0)
+        return out
+
+
+@dataclass
+class PreemptionFlag:
+    """Cooperative preemption: SIGTERM sets a flag; the train loop checkpoints
+    at the next step boundary and exits 0 (clean requeue)."""
+    triggered: bool = False
+
+    def install(self):
+        def _handler(signum, frame):
+            self.triggered = True
+        signal.signal(signal.SIGTERM, _handler)
+        return self

@@ -1,0 +1,152 @@
+"""Distributed training step: microbatch gradient accumulation, bf16 compute
+with fp32 master params, remat'd scanned layers, optional compressed cross-pod
+gradient all-reduce (the paper's quantizer — optim/grad_compress.py).
+
+The step is a pure function pytree->pytree, so pjit handles all partitioning:
+params/opt-state via distributed/sharding.py specs, batch over (pod, data).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.distributed import shard_hidden
+from repro.models.encdec import encdec_loss
+from repro.models.lm import lm_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_with_warmup
+from repro.optim.grad_compress import quantized_pod_mean
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    adamw: AdamWConfig = AdamWConfig()
+    # cross-pod gradient compression (None = exact bf16/fp32 all-reduce)
+    grad_compress_bits: Optional[int] = None
+    error_feedback: bool = True
+    # activation-checkpoint policy: 'full' | 'dots' | 'dots_no_batch'
+    remat_policy: str = "full"
+
+
+class TrainState(NamedTuple):
+    params: Any            # fp32 master
+    opt: Any               # AdamWState (fp32, congruent with params)
+    step: jax.Array
+    ef: Any = None         # error-feedback residuals (grad compression)
+
+
+def init_train_state(params, tcfg: TrainConfig) -> TrainState:
+    ef = None
+    if tcfg.grad_compress_bits is not None and tcfg.error_feedback:
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def loss_for(cfg: ArchConfig):
+    return encdec_loss if cfg.family == "audio" else lm_loss
+
+
+def _microbatch(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for lax.scan accumulation."""
+    return jax.tree.map(lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]),
+                        batch)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, *, mesh=None,
+                    multi_pod: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    base_loss = loss_for(cfg)
+    if cfg.family == "audio":
+        loss_fn = base_loss          # encdec has its own fixed remat
+    else:
+        loss_fn = partial(base_loss, remat_policy=tcfg.remat_policy)
+    sched = cosine_with_warmup(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps)
+
+    def grads_of(params, batch):
+        """Microbatch-accumulated mean loss/grads, bf16 forward."""
+        bf16 = nn.tree_cast(params, cfg.dtype)
+
+        if tcfg.num_microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(bf16)
+        else:
+            mbs = _microbatch(batch, tcfg.num_microbatches)
+
+            def body2(acc, mb):
+                l, g = jax.value_and_grad(lambda p: loss_fn(p, cfg, mb))(bf16)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), bf16)
+            (loss, grads), _ = jax.lax.scan(body2, (jnp.zeros(()), zero_g), mbs)
+            loss = loss / tcfg.num_microbatches
+            grads = jax.tree.map(lambda g: g / tcfg.num_microbatches, grads)
+        # grads computed w.r.t. bf16 copy; structure matches fp32 master
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return loss, grads
+
+    def train_step(state: TrainState, batch):
+        new_ef = state.ef
+        if tcfg.grad_compress_bits is not None and multi_pod:
+            # The compressed cross-pod exchange must be ISOLATED from pjit's
+            # automatic gradient reduction: under plain pjit the pod factor
+            # fuses into the (pod, data) all-reduce and quantizing afterwards
+            # adds bytes instead of saving them (measured — EXPERIMENTS.md
+            # §Tier-C). shard_map over the pod axis keeps the bwd psum on
+            # the data axis only; the pod hop is the int8 ring exchange.
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed import api as dist_api
+            from repro.optim.grad_compress import _quantized_psum_one
+            npod = mesh.shape["pod"]
+
+            def pod_local(params, ef, mb):
+                with dist_api.axis_ctx(dist_api.train_rules(False)):
+                    loss, grads = grads_of(params, mb)
+                if ef is not None:
+                    grads = jax.tree.map(lambda g, e: g + e, grads, ef)
+                flat, treedef = jax.tree.flatten(grads)
+                outs = [_quantized_psum_one(g, tcfg.grad_compress_bits,
+                                            "pod", npod) for g in flat]
+                grads = jax.tree.unflatten(treedef, [o[0] for o in outs])
+                resid = jax.tree.unflatten(treedef, [o[1] for o in outs])
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, grads, resid
+
+            batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+            ef_specs = (jax.tree.map(lambda _: P(), state.ef)
+                        if state.ef is not None else None)
+            loss, grads, residual = jax.shard_map(
+                pod_local, mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(), state.params),
+                          ef_specs, batch_specs),
+                out_specs=(P(), jax.tree.map(lambda _: P(), state.params),
+                           jax.tree.map(lambda _: P(), state.params)),
+                axis_names={"pod"}, check_vma=False,
+            )(state.params, state.ef, batch)
+            if state.ef is not None:
+                new_ef = residual
+            metrics = {"loss": loss}
+        else:
+            loss, grads = grads_of(state.params, batch)
+            metrics = {"loss": loss}
+        lr = sched(state.step)
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params,
+                                               lr, tcfg.adamw)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1, ef=new_ef), metrics
+
+    return train_step

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own flags in
+# a separate process). Keep determinism + quiet logs.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

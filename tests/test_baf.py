@@ -1,0 +1,158 @@
+"""Paper §3.3 + eq. (6): BaF predictor and consolidation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nn
+from repro.core.baf import (BaFConvConfig, BaFStreamConfig, baf_conv_backward,
+                            baf_conv_predict, baf_stream_backward,
+                            baf_stream_predict, consolidate, gather_bn,
+                            init_baf_conv, init_baf_stream,
+                            scatter_consolidated)
+from repro.core.quant import compute_quant_params, dequantize, quantize
+
+
+# ---------------------------------------------------------------------------
+# Consolidation — eq. (6)
+# ---------------------------------------------------------------------------
+
+def test_consolidate_keeps_in_bin_estimates(rng):
+    z = jnp.asarray(rng.normal(size=(2, 4, 4, 8)).astype(np.float32))
+    qp = compute_quant_params(z, 8)
+    codes = quantize(z, qp)
+    # estimate == truth -> same bin -> kept verbatim
+    out = consolidate(z, codes, qp)
+    assert np.allclose(np.asarray(out), np.asarray(z), atol=1e-6)
+
+
+def test_consolidate_clamps_out_of_bin_to_boundary(rng):
+    z = jnp.zeros((1, 1, 1, 1), jnp.float32)
+    qp = compute_quant_params(jnp.linspace(-1, 1, 16).reshape(1, 4, 4, 1), 4)
+    codes = quantize(jnp.full((1, 1, 1, 1), 0.9), qp)     # a high bin
+    est = jnp.full((1, 1, 1, 1), -0.9)                    # estimate far below
+    out = consolidate(est, codes, qp)
+    from repro.core.quant import bin_bounds
+    lo, hi = bin_bounds(codes, qp)
+    assert np.allclose(np.asarray(out), np.asarray(lo))   # nearest boundary
+
+
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_property_consolidation_never_hurts(bits, seed):
+    """|consolidate(est) - truth| <= |est - truth| + step (consolidated value
+    stays inside the truth's bin, so error is bounded by the bin width)."""
+    r = np.random.default_rng(seed)
+    z = jnp.asarray(r.normal(size=(1, 8, 8, 4)).astype(np.float32))
+    est = z + jnp.asarray(r.normal(size=z.shape).astype(np.float32)) * 0.5
+    qp = compute_quant_params(z, bits)
+    codes = quantize(z, qp)
+    out = consolidate(est, codes, qp)
+    step = np.asarray(qp.step())
+    err = np.abs(np.asarray(out) - np.asarray(z))
+    assert (err <= step + 1e-4).all()                     # within one bin
+    # and never worse than the dequantized fallback by more than eps
+    base = np.abs(np.asarray(dequantize(codes, qp)) - np.asarray(z))
+    assert err.mean() <= base.mean() + float(step.mean())
+
+
+def test_scatter_consolidated(rng):
+    z = jnp.zeros((1, 2, 2, 6))
+    sel = jnp.asarray([4, 1])
+    cons = jnp.ones((1, 2, 2, 2))
+    out = scatter_consolidated(z, cons, sel)
+    assert bool(jnp.all(out[..., 4] == 1)) and bool(jnp.all(out[..., 1] == 1))
+    assert bool(jnp.all(out[..., 0] == 0))
+
+
+# ---------------------------------------------------------------------------
+# BN inverse (backward predictor entry, paper §3.3)
+# ---------------------------------------------------------------------------
+
+def test_batchnorm_inverse(rng):
+    p = {
+        "scale": jnp.asarray(rng.uniform(0.5, 2, 8).astype(np.float32)),
+        "bias": jnp.asarray(rng.normal(size=8).astype(np.float32)),
+        "mean": jnp.asarray(rng.normal(size=8).astype(np.float32)),
+        "var": jnp.asarray(rng.uniform(0.5, 2, 8).astype(np.float32)),
+    }
+    x = jnp.asarray(rng.normal(size=(2, 4, 4, 8)).astype(np.float32))
+    z = nn.batchnorm_apply(p, x)
+    x_back = nn.batchnorm_inverse(p, z)
+    assert np.allclose(np.asarray(x_back), np.asarray(x), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Conv BaF predictor (Fig. 2)
+# ---------------------------------------------------------------------------
+
+def test_baf_conv_shapes(rng):
+    cfg = BaFConvConfig(c=8, q=16, hidden=12)
+    params = init_baf_conv(jax.random.PRNGKey(0), cfg)
+    bn = nn.init_batchnorm(32)
+    z_sel = jnp.asarray(rng.normal(size=(2, 4, 4, 8)).astype(np.float32))
+    bn_sel = gather_bn(bn, jnp.arange(8))
+    x_tilde = baf_conv_backward(params, z_sel, bn_sel)
+    assert x_tilde.shape == (2, 8, 8, 16)     # x2 upsample (stride-2 split)
+
+
+def test_baf_conv_predict_full_pipeline(rng):
+    c, q, p_ch = 4, 8, 16
+    cfg = BaFConvConfig(c=c, q=q, hidden=8)
+    baf = init_baf_conv(jax.random.PRNGKey(0), cfg)
+    split_conv = nn.init_conv(jax.random.PRNGKey(1), q, p_ch, 3, bias=False)
+    split_bn = nn.init_batchnorm(p_ch)
+    sel = jnp.arange(c)
+    z_sel = jnp.asarray(rng.normal(size=(2, 4, 4, c)).astype(np.float32))
+    z_tilde = baf_conv_predict(baf, split_conv, split_bn, sel, z_sel)
+    assert z_tilde.shape == (2, 4, 4, p_ch)   # all P channels restored
+    assert not bool(jnp.any(jnp.isnan(z_tilde)))
+    # with consolidation: transmitted channels end inside their bins
+    qp = compute_quant_params(z_sel, 8, per_example=True)
+    codes = quantize(z_sel, qp)
+    z_cons = baf_conv_predict(baf, split_conv, split_bn, sel, z_sel,
+                              codes=codes, qp=qp)
+    from repro.core.quant import bin_bounds
+    lo, hi = bin_bounds(codes, qp)
+    got = np.asarray(z_cons[..., :c])
+    assert (got >= np.asarray(lo) - 1e-4).all()
+    assert (got <= np.asarray(hi) + 1e-4).all()
+
+
+def test_baf_training_reduces_charbonnier(rng):
+    """Short end-to-end Tier-A check: a few steps of BaF training reduce the
+    restoration loss on the frozen-CNN feature distribution."""
+    from repro.configs.yolo_baf import smoke_config, smoke_data_config
+    from repro.models.cnn import init_cnn
+    from repro.train.baf_trainer import make_baf_loss, train_baf
+
+    cnn_cfg = smoke_config()._replace(input_size=32)
+    data_cfg = smoke_data_config()._replace(image_size=32, batch_size=4)
+    cnn = init_cnn(jax.random.PRNGKey(0), cnn_cfg)
+    sel = np.arange(8)
+    res = train_baf(cnn, cnn_cfg, data_cfg, sel, bits=8, hidden=8, steps=30,
+                    verbose=False)
+    first = res.losses[0][1]
+    from repro.models.cnn import cnn_edge
+    from repro.data.synthetic import shapes_batch_iterator
+    img, _ = next(shapes_batch_iterator(data_cfg, seed=123))
+    z = cnn_edge(cnn, img)[1]
+    final = float(make_baf_loss(cnn, sel, 8)(res.baf_params, z))
+    assert final < first
+
+
+# ---------------------------------------------------------------------------
+# Stream BaF predictor (transformer variant)
+# ---------------------------------------------------------------------------
+
+def test_baf_stream_predict(rng):
+    cfg = BaFStreamConfig(c=8, d_in=16, hidden=32)
+    params = init_baf_stream(jax.random.PRNGKey(0), cfg)
+    z_sel = jnp.asarray(rng.normal(size=(2, 6, 8)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32)) * 0.1
+    fwd = lambda x: x @ w                    # frozen "block"
+    sel = jnp.arange(8)
+    z_tilde = baf_stream_predict(params, fwd, sel, z_sel)
+    assert z_tilde.shape == (2, 6, 24)
+    assert not bool(jnp.any(jnp.isnan(z_tilde)))

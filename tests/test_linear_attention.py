@@ -1,0 +1,117 @@
+"""Sub-quadratic engine invariants: chunked == recurrent, segment chaining,
+windowed attention vs full-softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import repeat_kv, windowed_attention
+from repro.models.linear_attention import (LOG_DECAY_MIN,
+                                           chunked_linear_attention,
+                                           linear_attention_step,
+                                           reference_scan)
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("mode", ["rwkv", "ssm"])
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunked_equals_recurrent(rng, mode, chunk):
+    b, s, h, dk, dv = 2, 32, 2, 8, 8
+    q, k, v = _rand(rng, (b, s, h, dk)), _rand(rng, (b, s, h, dk)), _rand(rng, (b, s, h, dv))
+    ld = -jnp.abs(_rand(rng, (b, s, h, dk if mode == "rwkv" else 1)))
+    bonus = _rand(rng, (h, dk)) if mode == "rwkv" else None
+    y, st = chunked_linear_attention(q, k, v, ld, bonus=bonus, chunk=chunk,
+                                     mode=mode)
+    ld_c = jnp.clip(jnp.broadcast_to(ld, (b, s, h, dk)), LOG_DECAY_MIN, -1e-9)
+    ry, rst = reference_scan(q, k, v, ld_c, bonus=bonus, mode=mode)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(rst), atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16), split=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_property_segment_chaining(seed, split):
+    """Processing a stream in segments with carried state == one pass
+    (the invariant long-context ingestion relies on)."""
+    r = np.random.default_rng(seed)
+    b, s, h, dk, dv, chunk = 1, 32, 1, 4, 4, 4
+    q, k, v = (_rand(r, (b, s, h, dk)), _rand(r, (b, s, h, dk)),
+               _rand(r, (b, s, h, dv)))
+    ld = -jnp.abs(_rand(r, (b, s, h, dk)))
+    y_full, st_full = chunked_linear_attention(q, k, v, ld, chunk=chunk,
+                                               mode="ssm")
+    m = split * 8
+    y1, st1 = chunked_linear_attention(q[:, :m], k[:, :m], v[:, :m], ld[:, :m],
+                                       chunk=chunk, mode="ssm")
+    y2, st2 = chunked_linear_attention(q[:, m:], k[:, m:], v[:, m:], ld[:, m:],
+                                       chunk=chunk, mode="ssm",
+                                       initial_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_step_equals_chunked_single_tokens(rng):
+    b, s, h, dk, dv = 1, 8, 2, 4, 4
+    q, k, v = _rand(rng, (b, s, h, dk)), _rand(rng, (b, s, h, dk)), _rand(rng, (b, s, h, dv))
+    ld = jnp.clip(-jnp.abs(_rand(rng, (b, s, h, dk))), LOG_DECAY_MIN, -1e-9)
+    u = _rand(rng, (h, dk))
+    y_c, _ = chunked_linear_attention(q, k, v, ld, bonus=u, chunk=4, mode="rwkv")
+    state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = linear_attention_step(q[:, t], k[:, t], v[:, t], ld[:, t],
+                                         state, bonus=u, mode="rwkv")
+        ys.append(y)
+    y_s = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_windowed_attention_matches_masked_full(rng):
+    from repro.kernels.ref import flash_attention_ref
+    b, s, h, kh, hd, w = 1, 64, 4, 2, 16, 16
+    q = _rand(rng, (b, s, h, hd))
+    k = _rand(rng, (b, s, kh, hd))
+    v = _rand(rng, (b, s, kh, hd))
+    out = windowed_attention(q, k, v, window=w)
+    expect = flash_attention_ref(q, repeat_kv(k, h), repeat_kv(v, h),
+                                 causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_rwkv6_block_chunk_chaining(rng):
+    from repro.models.rwkv6 import (init_rwkv6_block, init_rwkv6_state,
+                                    rwkv6_block, rwkv6_block_chunk)
+    d, hd = 32, 8
+    p = init_rwkv6_block(jax.random.PRNGKey(0), d, hd, lora_rank=8, d_ff=64)
+    x = _rand(rng, (2, 16, d))
+    y_full = rwkv6_block(p, x, head_dim=hd, chunk=4)
+    st = init_rwkv6_state(2, d, hd)
+    y1, st = rwkv6_block_chunk(p, x[:, :8], st, head_dim=hd, chunk=4)
+    y2, _ = rwkv6_block_chunk(p, x[:, 8:], st, head_dim=hd, chunk=4)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+
+
+def test_mamba2_block_chunk_chaining(rng):
+    from repro.models.mamba2 import (Mamba2State, init_mamba2_block,
+                                     init_mamba2_state, mamba2_block,
+                                     mamba2_block_chunk)
+    d = 32
+    kw = dict(state_dim=8, head_dim=8, expand=2)
+    p = init_mamba2_block(jax.random.PRNGKey(0), d, conv_width=4, **kw)
+    x = _rand(rng, (2, 16, d))
+    y_full = mamba2_block(p, x, chunk=4, **kw)
+    st = init_mamba2_state(2, d, conv_width=4, **kw)
+    y1, st = mamba2_block_chunk(p, x[:, :8], st, chunk=4, **kw)
+    y2, _ = mamba2_block_chunk(p, x[:, 8:], st, chunk=4, **kw)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)

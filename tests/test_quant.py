@@ -1,0 +1,75 @@
+"""Paper eqs. (4)-(5): per-channel uniform scalar quantization."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (bin_bounds, compute_quant_params, dequantize,
+                              quantization_mse, quantize)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 7, 8])
+def test_roundtrip_error_bounded_by_half_step(rng, bits):
+    x = jnp.asarray(rng.normal(size=(4, 16, 16, 8)).astype(np.float32)) * 10
+    qp = compute_quant_params(x, bits)
+    x_hat = dequantize(quantize(x, qp), qp)
+    step = np.asarray(qp.step())
+    err = np.abs(np.asarray(x_hat - x))
+    # fp16 side-info rounding slightly perturbs the grid; 0.51*step + eps margin
+    assert (err <= 0.51 * step + 1e-4).all()
+
+
+@pytest.mark.parametrize("bits", [2, 8])
+@pytest.mark.parametrize("per_example", [False, True])
+def test_codes_in_range(rng, bits, per_example):
+    x = jnp.asarray(rng.normal(size=(3, 8, 8, 4)).astype(np.float32)) * 100
+    qp = compute_quant_params(x, bits, per_example=per_example)
+    codes = np.asarray(quantize(x, qp))
+    assert codes.min() >= 0 and codes.max() <= (1 << bits) - 1
+
+
+def test_fp16_side_info_never_overflows_top_code(rng):
+    # adversarial: values exactly at a max that fp16 rounds *down*
+    x = jnp.asarray(np.full((1, 4, 4, 2), 2049.3, np.float32))  # 2049.3 -> fp16 2050? varies
+    x = x.at[0, 0, 0, 0].set(-1.0)
+    qp = compute_quant_params(x, 8)
+    codes = np.asarray(quantize(x, qp))
+    assert codes.max() <= 255
+
+
+def test_per_example_side_info_shapes(rng):
+    x = jnp.asarray(rng.normal(size=(5, 8, 8, 16)).astype(np.float32))
+    qp = compute_quant_params(x, 8, per_example=True)
+    assert qp.mins.shape == (5, 1, 1, 16)
+    assert qp.side_info_bits() == 5 * 16 * 32  # paper: C*32 bits per example
+
+
+def test_mse_decreases_with_bits(rng):
+    x = jnp.asarray(rng.normal(size=(2, 16, 16, 8)).astype(np.float32))
+    mses = [float(quantization_mse(x, b)) for b in (2, 4, 6, 8)]
+    assert mses == sorted(mses, reverse=True)
+    assert mses[-1] < mses[0] / 100
+
+
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**16))
+@settings(max_examples=25, deadline=None)
+def test_property_dequantized_value_in_own_bin(bits, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(2, 8, 4)).astype(np.float32) * r.uniform(0.1, 50))
+    qp = compute_quant_params(x, bits)
+    codes = quantize(x, qp)
+    lo, hi = bin_bounds(codes, qp)
+    xh = dequantize(codes, qp)
+    # eq. (5) reconstruction sits inside the eq.-(6) bin bounds of its code
+    assert bool(jnp.all(xh >= lo - 1e-4)) and bool(jnp.all(xh <= hi + 1e-4))
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_property_constant_channel_is_lossless(seed):
+    r = np.random.default_rng(seed)
+    const = np.float16(r.normal())  # fp16-representable so side info is exact
+    x = jnp.full((1, 8, 8, 3), float(const), jnp.float32)
+    qp = compute_quant_params(x, 8)
+    xh = dequantize(quantize(x, qp), qp)
+    assert np.allclose(np.asarray(xh), np.asarray(x), atol=2e-3)

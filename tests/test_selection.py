@@ -1,0 +1,71 @@
+"""Paper §3.1 eqs. (2)-(3): correlation-based channel selection."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (accumulate_correlation, correlation_matrix_conv,
+                                  correlation_matrix_stream, select_channels,
+                                  select_channels_greedy, stride2_offsets)
+
+
+def test_stride2_offsets_cover_everything(rng):
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)).astype(np.float32))
+    offs = stride2_offsets(x)
+    assert len(offs) == 4 and all(o.shape == (2, 4, 4, 3) for o in offs)
+    total = sum(float(jnp.sum(o)) for o in offs)
+    assert np.isclose(total, float(jnp.sum(x)), rtol=1e-5)
+
+
+def test_correlation_matches_numpy(rng):
+    z = rng.normal(size=(4, 6, 6, 5)).astype(np.float32)
+    x = rng.normal(size=(4, 6, 6, 3)).astype(np.float32)
+    rho = np.asarray(correlation_matrix_stream(jnp.asarray(z), jnp.asarray(x)))
+    zf = z.reshape(-1, 5)
+    xf = x.reshape(-1, 3)
+    for p in range(5):
+        for q in range(3):
+            expect = abs(np.corrcoef(zf[:, p], xf[:, q])[0, 1])
+            assert np.isclose(rho[p, q], expect, atol=1e-5)
+
+
+def test_conv_correlation_shape_and_range(rng):
+    z = jnp.asarray(rng.normal(size=(2, 4, 4, 6)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)).astype(np.float32))
+    rho = np.asarray(correlation_matrix_conv(z, x))
+    assert rho.shape == (6, 3)
+    assert (rho >= -1e-6).all() and (rho <= 1 + 1e-6).all()
+
+
+def test_perfectly_correlated_channel_selected_first(rng):
+    x = rng.normal(size=(2, 8, 8, 3)).astype(np.float32)
+    z = rng.normal(size=(2, 4, 4, 4)).astype(np.float32)
+    z[..., 2] = x[:, ::2, ::2, 0] + x[:, ::2, ::2, 1]  # built from X -> max rho
+    rho = correlation_matrix_conv(jnp.asarray(z), jnp.asarray(x))
+    res = select_channels(rho)
+    assert res.order[0] == 2
+
+
+@given(p=st.integers(2, 12), q=st.integers(1, 6), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_property_greedy_equals_sort(p, q, seed):
+    """The paper's iterative re-selection == one descending sort (eq. 3 scores
+    don't change as channels are removed) — the equivalence select_channels
+    relies on."""
+    r = np.random.default_rng(seed)
+    rho = r.uniform(0, 1, size=(p, q))
+    c = max(1, p // 2)
+    greedy = select_channels_greedy(rho, c)
+    sorted_ = select_channels(rho).order[:c]
+    # ties broken identically (stable sort vs (-total, -p) max key)
+    assert np.array_equal(greedy, sorted_)
+
+
+def test_accumulate_correlation_streaming(rng):
+    batches = [
+        (jnp.asarray(rng.normal(size=(2, 4, 4, 4)).astype(np.float32)),
+         jnp.asarray(rng.normal(size=(2, 8, 8, 2)).astype(np.float32)))
+        for _ in range(3)
+    ]
+    res = accumulate_correlation(batches, conv=True)
+    assert res.order.shape == (4,)
+    assert (np.diff(res.scores) <= 1e-6).all()  # best-first ordering

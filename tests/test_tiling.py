@@ -1,0 +1,52 @@
+"""Paper §3.2: channel tiling into one rectangular image."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiling import (tile_batch, tile_channels, tile_grid,
+                               untile_batch, untile_channels)
+
+
+@pytest.mark.parametrize("c,rows,cols", [
+    (1, 1, 1), (2, 1, 2), (4, 2, 2), (8, 2, 4), (16, 4, 4),
+    (32, 4, 8), (64, 8, 8), (128, 8, 16), (256, 16, 16),
+])
+def test_grid_matches_paper_formula(c, rows, cols):
+    assert tile_grid(c) == (rows, cols)
+
+
+def test_non_power_of_two_rejected():
+    with pytest.raises(ValueError):
+        tile_grid(12)
+
+
+@given(lgc=st.integers(0, 7), h=st.integers(1, 6), w=st.integers(1, 6),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_property_tile_untile_roundtrip(lgc, h, w, seed):
+    c = 1 << lgc
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.integers(0, 255, size=(h, w, c)).astype(np.uint8))
+    img = tile_channels(x)
+    rows, cols = tile_grid(c)
+    assert img.shape == (rows * h, cols * w)   # rectangular, no empty area
+    back = untile_channels(img, c)
+    assert bool(jnp.all(back == x))
+
+
+def test_batch_roundtrip(rng):
+    x = jnp.asarray(rng.integers(0, 255, size=(3, 4, 4, 16)).astype(np.uint8))
+    assert bool(jnp.all(untile_batch(tile_batch(x), 16) == x))
+
+
+def test_channel_placement_row_major(rng):
+    # channel k lands at tile (k // cols, k % cols)
+    h = w = 2
+    c = 8
+    x = jnp.stack([jnp.full((h, w), k, jnp.uint8) for k in range(c)], axis=-1)
+    img = np.asarray(tile_channels(x))
+    rows, cols = tile_grid(c)
+    for k in range(c):
+        ti, tj = k // cols, k % cols
+        assert (img[ti * h:(ti + 1) * h, tj * w:(tj + 1) * w] == k).all()
