@@ -1,0 +1,135 @@
+"""Gateway serving benchmark: micro-batched vs one-at-a-time split inference.
+
+    PYTHONPATH=src python benchmarks/serve_gateway.py [--smoke] [--requests N]
+
+Measures the cloud side of the serving gateway (decode -> micro-batch ->
+jitted BaF restore + fused consolidation -> cloud forward) under a stream of
+single-image requests, for max_batch in {1, 4, 8}:
+
+  * requests/sec end to end (encode + wire + cloud, wall clock),
+  * requests/sec of the cloud compute alone (what batching actually targets),
+  * p50/p99 total latency (simulated wire + measured compute).
+
+Weights are untrained — throughput and compile behaviour do not depend on
+training. Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py
+and writes benchmarks/serve_gateway_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.configs.yolo_baf import smoke_config, smoke_data_config
+from repro.core.baf import BaFConvConfig, init_baf_conv
+from repro.data.synthetic import shapes_batch_iterator
+from repro.models.cnn import init_cnn
+from repro.serve import (ChannelConfig, OperatingPoint, ServingGateway,
+                         SimulatedChannel)
+
+_ROWS: list[str] = []
+
+
+def _row(name: str, us: float, derived: str):
+    line = f"{name},{us:.1f},{derived}"
+    _ROWS.append(line)
+    print(line, flush=True)
+
+
+def build_system(c: int = 8, input_size: int = 32):
+    cnn_cfg = smoke_config()._replace(input_size=input_size)
+    data_cfg = smoke_data_config()._replace(image_size=input_size,
+                                            batch_size=8)
+    params = init_cnn(jax.random.PRNGKey(0), cnn_cfg)
+    baf = init_baf_conv(jax.random.PRNGKey(1),
+                        BaFConvConfig(c=c, q=cnn_cfg.split_q, hidden=8))
+    bank = {c: (baf, np.arange(c))}
+    return params, bank, data_cfg
+
+
+def request_stream(data_cfg, n: int) -> np.ndarray:
+    it = shapes_batch_iterator(data_cfg, seed=123)
+    rows = []
+    while len(rows) < n:
+        img, _ = next(it)
+        rows.append(np.asarray(img))
+    return np.concatenate(rows, axis=0)[:n]
+
+
+def bench_mode(params, bank, imgs, *, max_batch: int, c: int):
+    op = OperatingPoint(c=c, bits=8)
+    channel_cfg = ChannelConfig(bandwidth_bps=20e6, base_latency_s=0.005)
+    gw = ServingGateway(params, bank, default_op=op, max_batch=max_batch,
+                        channel=SimulatedChannel(channel_cfg))
+    gw.serve(imgs[:max_batch * 2])                  # warm the jit caches
+    # fresh channel for the measured run: the warm-up's wire backlog would
+    # otherwise inflate latency proportionally to max_batch
+    gw.channel = SimulatedChannel(channel_cfg)
+    t0 = time.perf_counter()
+    responses, tel = gw.serve(imgs)
+    wall = time.perf_counter() - t0
+    n = len(responses)
+    # each batch's compute is stamped on every member; divide it back out
+    cloud_s = sum(r.compute_s / r.batch_size for r in tel.records)
+    s = tel.summary(wall_s=wall)
+    return {
+        "max_batch": max_batch,
+        "requests": n,
+        "wall_s": wall,
+        "rps_end_to_end": n / wall,
+        "rps_cloud_compute": n / cloud_s,
+        "cloud_s": cloud_s,
+        "p50_latency_ms": s["p50_latency_s"] * 1e3,
+        "p99_latency_ms": s["p99_latency_s"] * 1e3,
+        "mean_batch": s["mean_batch_size"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (< 60 s)")
+    args = ap.parse_args()
+    n = args.requests or (32 if args.smoke else 96)
+    c = 8
+
+    params, bank, data_cfg = build_system(c=c)
+    imgs = request_stream(data_cfg, n)
+
+    results = {}
+    for max_batch in (1, 4, 8):
+        r = bench_mode(params, bank, imgs, max_batch=max_batch, c=c)
+        results[f"max_batch_{max_batch}"] = r
+        _row(f"gateway_b{max_batch}", 1e6 / r["rps_end_to_end"],
+             f"rps={r['rps_end_to_end']:.1f} "
+             f"cloud_rps={r['rps_cloud_compute']:.1f} "
+             f"p50={r['p50_latency_ms']:.2f}ms p99={r['p99_latency_ms']:.2f}ms")
+
+    naive, b4, b8 = (results["max_batch_1"], results["max_batch_4"],
+                     results["max_batch_8"])
+    speed4 = b4["rps_cloud_compute"] / naive["rps_cloud_compute"]
+    speed8 = b8["rps_cloud_compute"] / naive["rps_cloud_compute"]
+    results["cloud_speedup_b4_vs_naive"] = speed4
+    results["cloud_speedup_b8_vs_naive"] = speed8
+    _row("gateway_speedup", 0.0,
+         f"cloud-compute speedup b4={speed4:.2f}x b8={speed8:.2f}x vs naive")
+    if speed4 <= 1.0:
+        print("WARNING: micro-batching showed no cloud-compute win at "
+              "batch=4 on this host", flush=True)
+
+    out = os.path.join(os.path.dirname(__file__),
+                       "serve_gateway_results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -55,10 +55,15 @@ def pack_bits(codes: np.ndarray, bits: int) -> bytes:
 
 def unpack_bits(data: bytes, bits: int, count: int) -> np.ndarray:
     buf = np.frombuffer(data, dtype=np.uint8)
+    need = (count * bits + 7) // 8
+    if len(data) < need:
+        raise ValueError(
+            f"bitstream too short: {len(data)} bytes but {count} codes at "
+            f"{bits} bits need {need}")
     if bits == 8:
         return buf[:count].copy()
     if bits == 16:
-        return np.frombuffer(data, dtype=np.uint16)[:count].copy()
+        return np.frombuffer(data[:2 * count], dtype=np.uint16).copy()
     out = np.zeros(count, dtype=np.uint32)
     positions = np.arange(count, dtype=np.uint64) * bits
     for b in range(bits):
@@ -135,6 +140,12 @@ def encode(codes: np.ndarray, qp: QuantParams, backend: str = "zlib",
         from PIL import Image
         if qp.bits > 8:
             raise ValueError("png backend supports <=8 bits")
+        if codes.size and codes.min() < 0:
+            raise ValueError("png backend: negative codes are invalid")
+        if codes.size and codes.max() > 255:
+            raise ValueError(
+                f"png backend: codes up to {int(codes.max())} do not fit in "
+                "8 bits")
         img = codes.astype(np.uint8)
         if img.ndim != 2:
             raise ValueError("png backend expects a 2D tiled image")

@@ -4,18 +4,24 @@
 Device-side math (quantize, BaF, consolidation) is jit-able JAX; the entropy
 codec is host code (DESIGN.md §4). The engine measures real bits on the wire,
 including the C*32 side-info bits, matching the paper's accounting.
+
+The encode/decode/restore paths are module-level pure functions parameterized
+by ``(C, bits)`` so callers that vary the operating point per request (the
+serving gateway, repro.serve.gateway) reuse one jit cache entry per distinct
+``(C, bits, batch-bucket)`` instead of re-tracing per engine instance.
+``SplitInferenceEngine`` remains the convenient single-operating-point wrapper.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec as wire
-from repro.core.baf import baf_conv_predict
+from repro.core.baf import baf_conv_predict, scatter_consolidated
 from repro.core.quant import QuantParams, compute_quant_params, dequantize, quantize
 from repro.core.tiling import tile_batch, untile_batch
 
@@ -32,6 +38,138 @@ class SplitStats:
     def reduction_vs_raw(self) -> float:
         return 1.0 - self.total_bits / self.raw_bits
 
+
+# ---------------------------------------------------------------------------
+# Pure encode / decode / restore paths (shared by engine and gateway)
+# ---------------------------------------------------------------------------
+
+def encode_activation(z, sel_idx, bits: int, *,
+                      backend: str = "zlib") -> tuple[wire.EncodedTensor, SplitStats]:
+    """Quantize/tile/entropy-code the split activation at one operating point.
+
+    z : (B, H, W, P) full split-layer BN output
+    sel_idx : (C,) ordered selected-channel indices
+    """
+    sel_idx = jnp.asarray(np.asarray(sel_idx), jnp.int32)
+    z_sel = z[..., sel_idx]                        # (B, H, W, C)
+    # per-example side info, as transmitted in the paper (one m,M per
+    # channel per image; counted at 32 bits/channel in total_bits)
+    qp = compute_quant_params(z_sel, bits, per_example=True)
+    codes = np.asarray(quantize(z_sel, qp))
+    tiled = np.asarray(tile_batch(jnp.asarray(codes)))   # (B, rH, cW)
+    # one tiled image per batch element, concatenated vertically on the wire
+    stream = tiled.reshape(-1, tiled.shape[-1])
+    enc = wire.encode(stream, qp, backend=backend)
+    stats = SplitStats(
+        total_bits=enc.total_bits(),
+        payload_bits=8 * len(enc.payload),
+        side_info_bits=8 * len(enc.side_info),
+        raw_bits=int(np.prod(z.shape)) * 32,
+        entropy_bits=wire.empirical_entropy_bits(codes, bits),
+    )
+    return enc, stats
+
+
+def decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
+    """Wire blob -> (codes (B, H, W, C), mins (B, 1, 1, C), maxs (B, 1, 1, C))."""
+    stream, qp = wire.decode(enc)
+    tiled = stream.reshape(batch, -1, stream.shape[-1])
+    codes = untile_batch(jnp.asarray(tiled), c)
+    mins = jnp.asarray(qp.mins).reshape(batch, 1, 1, c)
+    maxs = jnp.asarray(qp.maxs).reshape(batch, 1, 1, c)
+    return codes, mins, maxs
+
+
+@partial(jax.jit, static_argnames=("bits", "consolidation"))
+def restore_codes(baf_params, split, sel_idx, codes, mins, maxs, *,
+                  bits: int, consolidation: bool = True):
+    """Dequantize + BaF restore at one operating point (reference path).
+
+    One compile per distinct (C, bits, consolidation, batch-bucket shape);
+    callers that bucket their batches (serve/batcher.py) never re-trace.
+    """
+    qp = QuantParams(mins, maxs, bits)
+    z_hat_sel = dequantize(codes, qp)
+    return baf_conv_predict(
+        baf_params, split["conv"], split["bn"], sel_idx, z_hat_sel,
+        codes=codes if consolidation else None,
+        qp=qp if consolidation else None)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def restore_codes_fused(baf_params, split, sel_idx, codes, mins, maxs, *,
+                        bits: int):
+    """Batched restore with the fused Pallas consolidation kernel.
+
+    Same math as ``restore_codes(consolidation=True)`` but eq. (6) runs through
+    kernels/consolidate.py: bounds are rebuilt from codes + side info in VMEM
+    instead of materializing (lo, hi) in HBM — the hot path for micro-batched
+    gateway serving.
+    """
+    from repro.kernels.consolidate import consolidate_pallas
+    qp = QuantParams(mins, maxs, bits)
+    z_hat_sel = dequantize(codes, qp)
+    z_tilde = baf_conv_predict(baf_params, split["conv"], split["bn"],
+                               sel_idx, z_hat_sel)
+    b, h, w, c = codes.shape
+    r = h * w
+    block_r = 512 if r % 512 == 0 else r
+    cons = consolidate_pallas(
+        z_tilde[..., sel_idx].reshape(b, r, c),
+        codes.reshape(b, r, c),
+        mins.reshape(b, c), maxs.reshape(b, c),
+        bits, block_r=block_r)
+    return scatter_consolidated(z_tilde, cons.reshape(b, h, w, c), sel_idx)
+
+
+@lru_cache(maxsize=1)
+def _jitted_cnn_fns():
+    # lazy: models.cnn is imported on first use (mirrors the engine's local
+    # import), but the jit wrappers are cached so repeated fidelity sweeps
+    # (build_rd_table) trace each network once per shape, not once per call
+    from repro.models.cnn import cnn_cloud, cnn_edge
+    return (jax.jit(lambda p, i: cnn_edge(p, i)[1]), jax.jit(cnn_cloud))
+
+
+def fidelity_metrics(params, baf_params, sel_idx, img, *, bits: int,
+                     consolidation: bool = True, z=None):
+    """Continuous restoration metrics at one (C, bits) operating point.
+
+    The mAP proxy saturates on the synthetic task; these expose the C/n
+    degradation trends: (psnr_db of sigma(Z_tilde) vs sigma(Z), mean
+    KL(cloud || split) of the downstream logits). Pass a precomputed split
+    activation ``z`` to skip the edge forward (rate-controller sweeps).
+    """
+    import jax.nn as jnn
+
+    from repro import nn as _nn
+
+    edge_fn, cloud_fn = _jitted_cnn_fns()
+    sel_idx = jnp.asarray(np.asarray(sel_idx), jnp.int32)
+    if z is None:
+        z = edge_fn(params, img)
+    z_sel = z[..., sel_idx]
+    qp = compute_quant_params(z_sel, bits, per_example=True)
+    codes = quantize(z_sel, qp)
+    z_tilde = restore_codes(baf_params, params["split"], sel_idx, codes,
+                            qp.mins, qp.maxs, bits=bits,
+                            consolidation=consolidation)
+    y_true = _nn.leaky_relu(z).astype(jnp.float32)
+    y_rest = _nn.leaky_relu(z_tilde).astype(jnp.float32)
+    mse = float(jnp.mean(jnp.square(y_true - y_rest)))
+    peak = float(jnp.max(jnp.abs(y_true))) or 1.0
+    psnr = 10.0 * np.log10(peak * peak / max(mse, 1e-12))
+    logits_split = cloud_fn(params, z_tilde)
+    logits_cloud = cloud_fn(params, z)
+    p_cloud = jnn.log_softmax(logits_cloud.astype(jnp.float32))
+    p_split = jnn.log_softmax(logits_split.astype(jnp.float32))
+    kl = float(jnp.mean(jnp.sum(jnp.exp(p_cloud) * (p_cloud - p_split), -1)))
+    return psnr, kl
+
+
+# ---------------------------------------------------------------------------
+# Single-operating-point engine (thin wrapper over the pure paths)
+# ---------------------------------------------------------------------------
 
 class SplitInferenceEngine:
     """Orchestrates the paper's mobile/cloud pipeline for the Tier-A CNN.
@@ -57,76 +195,27 @@ class SplitInferenceEngine:
         self.backend = backend
         self.consolidation = consolidation
 
-        def _restore(baf_params, split, codes, qp_mins, qp_maxs):
-            qp = QuantParams(qp_mins, qp_maxs, self.bits)
-            z_hat_sel = dequantize(codes, qp)
-            return baf_conv_predict(
-                baf_params, split["conv"], split["bn"], self.sel_idx, z_hat_sel,
-                codes=codes if self.consolidation else None,
-                qp=qp if self.consolidation else None)
-
-        self._restore_fn = jax.jit(_restore)
-
     # -- mobile side --------------------------------------------------------
     def encode(self, img) -> tuple[wire.EncodedTensor, SplitStats]:
         z = self._edge_fn(self.params, img)            # (B, H, W, P)
-        z_sel = z[..., self.sel_idx]                   # (B, H, W, C)
-        # per-example side info, as transmitted in the paper (one m,M per
-        # channel per image; counted at 32 bits/channel in total_bits)
-        qp = compute_quant_params(z_sel, self.bits, per_example=True)
-        codes = np.asarray(quantize(z_sel, qp))
-        tiled = np.asarray(tile_batch(jnp.asarray(codes)))   # (B, rH, cW)
-        # one tiled image per batch element, concatenated vertically on the wire
-        stream = tiled.reshape(-1, tiled.shape[-1])
-        enc = wire.encode(stream, qp, backend=self.backend)
-        stats = SplitStats(
-            total_bits=enc.total_bits(),
-            payload_bits=8 * len(enc.payload),
-            side_info_bits=8 * len(enc.side_info),
-            raw_bits=int(np.prod(z.shape)) * 32,
-            entropy_bits=wire.empirical_entropy_bits(codes, self.bits),
-        )
-        return enc, stats
+        return encode_activation(z, self.sel_idx, self.bits,
+                                 backend=self.backend)
 
     # -- cloud side ----------------------------------------------------------
     def decode_and_infer(self, enc: wire.EncodedTensor, batch: int):
-        stream, qp = wire.decode(enc)
-        tiled = stream.reshape(batch, -1, stream.shape[-1])
-        codes = untile_batch(jnp.asarray(tiled), len(self.sel_idx))
-        c = len(self.sel_idx)
-        mins = jnp.asarray(qp.mins).reshape(batch, 1, 1, c)
-        maxs = jnp.asarray(qp.maxs).reshape(batch, 1, 1, c)
-        z_tilde = self._restore_fn(self.baf_params, self.params["split"],
-                                   codes, mins, maxs)
+        codes, mins, maxs = decode_stream(enc, batch, len(self.sel_idx))
+        z_tilde = restore_codes(self.baf_params, self.params["split"],
+                                self.sel_idx, codes, mins, maxs,
+                                bits=self.bits,
+                                consolidation=self.consolidation)
         return self._cloud_fn(self.params, z_tilde)
 
     # -- fidelity metrics ------------------------------------------------------
     def fidelity(self, img):
-        """Continuous restoration metrics (the mAP proxy saturates on the
-        synthetic task; these expose the C/n degradation trends):
-        (psnr_db of sigma(Z_tilde) vs sigma(Z), mean KL(cloud || split) of
-        the downstream logits)."""
-        import jax.nn as jnn
-        from repro import nn as _nn
-        x_in_z = jax.jit(lambda p, i: __import__("repro.models.cnn",
-                         fromlist=["cnn_edge"]).cnn_edge(p, i))(self.params, img)
-        z = x_in_z[1]
-        z_sel = z[..., self.sel_idx]
-        qp = compute_quant_params(z_sel, self.bits, per_example=True)
-        codes = quantize(z_sel, qp)
-        z_tilde = self._restore_fn(self.baf_params, self.params["split"],
-                                   codes, qp.mins, qp.maxs)
-        y_true = _nn.leaky_relu(z).astype(jnp.float32)
-        y_rest = _nn.leaky_relu(z_tilde).astype(jnp.float32)
-        mse = float(jnp.mean(jnp.square(y_true - y_rest)))
-        peak = float(jnp.max(jnp.abs(y_true))) or 1.0
-        psnr = 10.0 * np.log10(peak * peak / max(mse, 1e-12))
-        logits_split = self._cloud_fn(self.params, z_tilde)
-        logits_cloud = self._cloud_fn(self.params, z)
-        p_cloud = jnn.log_softmax(logits_cloud.astype(jnp.float32))
-        p_split = jnn.log_softmax(logits_split.astype(jnp.float32))
-        kl = float(jnp.mean(jnp.sum(jnp.exp(p_cloud) * (p_cloud - p_split), -1)))
-        return psnr, kl
+        """Continuous restoration metrics — see :func:`fidelity_metrics`."""
+        return fidelity_metrics(self.params, self.baf_params, self.sel_idx,
+                                img, bits=self.bits,
+                                consolidation=self.consolidation)
 
     # -- end to end ----------------------------------------------------------
     def __call__(self, img):

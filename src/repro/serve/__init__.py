@@ -1,0 +1,21 @@
+"""Serving: LM prefill/decode engine (engine.py) and the collaborative-
+intelligence split-inference gateway (gateway.py + channel/rate_control/
+batcher/telemetry).
+
+The LM engine pulls in the transformer model zoo, so it is intentionally NOT
+imported here — use ``from repro.serve.engine import ...`` directly.
+"""
+from repro.serve.batcher import (BucketKey, DecodedRequest, MicroBatch,
+                                 MicroBatcher, bucket_sizes)
+from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
+from repro.serve.gateway import GatewayResponse, ServingGateway
+from repro.serve.rate_control import (OperatingPoint, RateController, RDPoint,
+                                      build_rd_table)
+from repro.serve.telemetry import RequestRecord, Telemetry
+
+__all__ = [
+    "BucketKey", "DecodedRequest", "MicroBatch", "MicroBatcher",
+    "bucket_sizes", "ChannelConfig", "SimulatedChannel", "Transmission",
+    "GatewayResponse", "ServingGateway", "OperatingPoint", "RateController",
+    "RDPoint", "build_rd_table", "RequestRecord", "Telemetry",
+]

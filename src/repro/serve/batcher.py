@@ -1,0 +1,114 @@
+"""Micro-batching queue for the serving gateway.
+
+Requests arrive with heterogeneous operating points ``(C, bits)`` (the rate
+controller varies them per request), but the jitted BaF-restore + cloud
+forward compile per input shape. Left unchecked, every distinct batch size
+would trigger a fresh XLA compile. The batcher therefore:
+
+  * groups decoded requests by bucket key ``(C, bits, H, W)`` — requests in a
+    group share one restore compile,
+  * pads each flushed group up to a small set of power-of-two batch sizes
+    (1, 2, 4, ... max_batch) by repeating the last element, so the total
+    number of compiles is bounded by ``|keys| * |bucket sizes|``,
+  * preserves request identity: every :class:`MicroBatch` carries its
+    requests in arrival order and ``pad`` tells the consumer how many
+    trailing rows to drop.
+
+Pure host-side data plumbing — no JAX in here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BucketKey:
+    c: int
+    bits: int
+    h: int
+    w: int
+
+
+@dataclass
+class DecodedRequest:
+    """One request after wire decode, ready for restore."""
+    req_id: int
+    codes: np.ndarray          # (1, H, W, C) integer codes
+    mins: np.ndarray           # (1, 1, 1, C) fp16
+    maxs: np.ndarray           # (1, 1, 1, C) fp16
+    c: int
+    bits: int
+    t_arrive: float = 0.0      # channel arrival (virtual clock)
+    meta: Any = None           # opaque caller payload (stats, op point, ...)
+
+    @property
+    def key(self) -> BucketKey:
+        _, h, w, _ = self.codes.shape
+        return BucketKey(c=self.c, bits=self.bits, h=h, w=w)
+
+
+@dataclass
+class MicroBatch:
+    key: BucketKey
+    requests: list[DecodedRequest]       # arrival order, len = true batch
+    codes: np.ndarray                    # (Npad, H, W, C)
+    mins: np.ndarray                     # (Npad, 1, 1, C)
+    maxs: np.ndarray                     # (Npad, 1, 1, C)
+    pad: int                             # trailing padded rows to drop
+
+    @property
+    def padded_size(self) -> int:
+        return self.codes.shape[0]
+
+
+def bucket_sizes(max_batch: int) -> tuple[int, ...]:
+    """Powers of two up to and including ``max_batch``."""
+    sizes, s = [], 1
+    while s < max_batch:
+        sizes.append(s)
+        s *= 2
+    sizes.append(max_batch)
+    return tuple(dict.fromkeys(sizes))
+
+
+class MicroBatcher:
+    """Groups decoded requests into padded bucket-shaped micro-batches."""
+
+    def __init__(self, *, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.sizes = bucket_sizes(max_batch)
+        self._pending: dict[BucketKey, list[DecodedRequest]] = {}
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._pending.values())
+
+    def add(self, req: DecodedRequest) -> list[MicroBatch]:
+        """Enqueue; returns any group that reached max_batch (flushed full)."""
+        group = self._pending.setdefault(req.key, [])
+        group.append(req)
+        if len(group) >= self.max_batch:
+            del self._pending[req.key]
+            return [self._make_batch(req.key, group)]
+        return []
+
+    def flush(self) -> list[MicroBatch]:
+        """Drain every pending group (end of tick / shutdown)."""
+        out = [self._make_batch(k, g) for k, g in self._pending.items()]
+        self._pending.clear()
+        return out
+
+    def _make_batch(self, key: BucketKey, group: list[DecodedRequest]) -> MicroBatch:
+        n = len(group)
+        target = next(s for s in self.sizes if s >= n)
+        pad = target - n
+        def stack(field_name):
+            arrs = [getattr(r, field_name) for r in group]
+            arrs += [arrs[-1]] * pad            # repeat last row as padding
+            return np.concatenate(arrs, axis=0)
+        return MicroBatch(key=key, requests=list(group), codes=stack("codes"),
+                          mins=stack("mins"), maxs=stack("maxs"), pad=pad)

@@ -1,0 +1,128 @@
+"""Deterministic, seedable channel models for the collaborative-intelligence
+gateway (repro.serve.gateway).
+
+The paper's premise is a bandwidth-constrained uplink between an edge device
+and the cloud. This module simulates that link with a virtual clock so the
+gateway can be tested and benchmarked deterministically:
+
+  * serialization delay — ``bits / bandwidth_bps``,
+  * propagation delay   — ``base_latency_s`` plus optional uniform jitter
+                          drawn from a seeded generator,
+  * a single-transmission-at-a-time link: a new transmission starts only
+    after the previous one has finished serializing,
+  * an optional per-tick bit budget: the channel grants at most
+    ``budget_bits_per_tick`` bits in any window of ``tick_s`` seconds; a
+    transmission that does not fit in the remaining budget waits for the next
+    tick (and may span several ticks). The rate controller reads
+    ``budget_remaining()`` to pick an operating point that fits.
+
+All times are in seconds on the channel's own virtual clock; nothing here
+sleeps or touches the wall clock.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    bandwidth_bps: float = 1e6       # bits per second on the wire
+    base_latency_s: float = 0.01     # one-way propagation delay
+    jitter_s: float = 0.0            # uniform [0, jitter_s) added per packet
+    tick_s: float = 1.0              # budget accounting window
+    budget_bits_per_tick: int | None = None   # None = unmetered
+
+
+@dataclass(frozen=True)
+class Transmission:
+    """One packet's journey through the simulated link."""
+    bits: int
+    t_submit: float       # when the sender handed the packet to the channel
+    t_start: float        # when the wire started serializing it
+    t_arrive: float       # when the last bit (+ propagation) reached the cloud
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_arrive - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_start - self.t_submit
+
+
+class SimulatedChannel:
+    """Virtual-clock channel; every run with the same seed is bit-identical."""
+
+    def __init__(self, cfg: ChannelConfig, *, seed: int = 0):
+        self.cfg = cfg
+        self._rng = np.random.default_rng(seed)
+        self.now = 0.0                 # virtual clock (advanced by transmits)
+        self._busy_until = 0.0         # wire occupied until here
+        self._tick_used: dict[int, int] = {}   # tick index -> bits consumed
+
+    # -- budget -------------------------------------------------------------
+    def _tick_of(self, t: float) -> int:
+        return int(math.floor(t / self.cfg.tick_s))
+
+    def budget_remaining(self, at: float | None = None) -> float:
+        """Bits still grantable in the tick containing ``at`` (default: now)."""
+        if self.cfg.budget_bits_per_tick is None:
+            return math.inf
+        tick = self._tick_of(self.now if at is None else at)
+        return self.cfg.budget_bits_per_tick - self._tick_used.get(tick, 0)
+
+    def _consume_budget(self, bits: int, t_start: float) -> tuple[float, float]:
+        """Spend ``bits`` of tick budget starting at ``t_start``.
+
+        Returns ``(begin, granted_by)``: the (possibly deferred) time the wire
+        can begin, and the earliest time the *last* chunk of budget is granted
+        — a packet spanning several ticks cannot finish before the tick that
+        grants its final bits opens.
+        """
+        if self.cfg.budget_bits_per_tick is None:
+            return t_start, t_start
+        per_tick = self.cfg.budget_bits_per_tick
+        tick = self._tick_of(t_start)
+        # wait for a tick that can grant the packet's first chunk in full
+        # (packets larger than a whole tick budget start on a fresh tick)
+        first_chunk = min(bits, per_tick)
+        while per_tick - self._tick_used.get(tick, 0) < first_chunk:
+            tick += 1
+        begin = max(t_start, tick * self.cfg.tick_s)
+        remaining = bits
+        while remaining > 0:
+            grant = min(remaining, per_tick - self._tick_used.get(tick, 0))
+            self._tick_used[tick] = self._tick_used.get(tick, 0) + grant
+            remaining -= grant
+            if remaining > 0:
+                tick += 1
+        return begin, tick * self.cfg.tick_s
+
+    # -- transmission -------------------------------------------------------
+    def transmit(self, bits: int, t_submit: float | None = None) -> Transmission:
+        """Send ``bits`` over the link; advances the virtual clock."""
+        bits = int(bits)
+        if bits <= 0:
+            raise ValueError(f"cannot transmit {bits} bits")
+        t_submit = self.now if t_submit is None else max(t_submit, 0.0)
+        t_ready = max(t_submit, self._busy_until)
+        t_start, granted_by = self._consume_budget(bits, t_ready)
+        serialization = bits / self.cfg.bandwidth_bps
+        jitter = (float(self._rng.uniform(0.0, self.cfg.jitter_s))
+                  if self.cfg.jitter_s > 0 else 0.0)
+        # the last bit leaves no earlier than the tick granting it opens
+        t_done = max(t_start + serialization, granted_by)
+        t_arrive = t_done + self.cfg.base_latency_s + jitter
+        self._busy_until = t_done
+        self.now = max(self.now, t_submit)
+        return Transmission(bits=bits, t_submit=t_submit, t_start=t_start,
+                            t_arrive=t_arrive)
+
+    def advance(self, dt: float) -> None:
+        """Move the virtual clock forward (new tick budgets become current)."""
+        if dt < 0:
+            raise ValueError("time moves forward only")
+        self.now += dt

@@ -1,0 +1,188 @@
+"""Collaborative-intelligence serving gateway — multi-client split inference.
+
+Turns the single-shot :class:`repro.core.split.SplitInferenceEngine` into a
+service loop over many concurrent requests (paper Fig. 1 at serving scale):
+
+    edge forward -> rate control picks (C, bits) -> encode -> simulated
+    channel -> decode -> micro-batch -> jitted BaF restore (+ fused Pallas
+    consolidation) -> cloud forward -> respond, with per-request telemetry.
+
+Design points:
+  * the rate controller (serve/rate_control.py) consults the channel's
+    remaining bit budget per request, so operating points adapt to congestion;
+  * each C has its own BaF predictor (its input width is C) — the gateway
+    holds a bank ``{c: (baf_params, sel_idx)}``;
+  * the micro-batcher (serve/batcher.py) pads groups with equal
+    ``(C, bits, H, W)`` to power-of-two batch sizes so the restore + cloud
+    forward jit-compile once per bucket, never per request;
+  * transport timing is simulated (deterministic virtual clock), compute
+    timing is measured — telemetry keeps the two separate.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as wire
+from repro.core.split import (SplitStats, decode_stream, encode_activation,
+                              restore_codes, restore_codes_fused)
+from repro.serve.batcher import DecodedRequest, MicroBatch, MicroBatcher
+from repro.serve.channel import SimulatedChannel, Transmission
+from repro.serve.rate_control import OperatingPoint, RateController
+from repro.serve.telemetry import RequestRecord, Telemetry
+
+
+@dataclass
+class GatewayResponse:
+    req_id: int
+    logits: np.ndarray            # (num_classes,)
+    op: OperatingPoint
+    stats: SplitStats             # wire accounting for this request
+
+
+class ServingGateway:
+    """Orchestrates decode -> batch -> restore -> cloud for many clients.
+
+    Parameters
+    ----------
+    params : CNN params (models/cnn.py)
+    baf_bank : {c: (baf_params, sel_idx)} — BaF predictor + channel order per C
+    channel : SimulatedChannel or None (None = ideal wire, zero latency)
+    controller : RateController or None (None = fixed ``default_op``)
+    default_op : operating point used when no controller is given
+    max_batch : micro-batch cap (1 = naive one-at-a-time serving)
+    fused : use the Pallas fused-consolidation restore path
+    """
+
+    def __init__(self, params, baf_bank: dict, *,
+                 channel: SimulatedChannel | None = None,
+                 controller: RateController | None = None,
+                 default_op: OperatingPoint | None = None,
+                 backend: str = "zlib", max_batch: int = 8,
+                 fused: bool = True):
+        if not baf_bank:
+            raise ValueError("empty BaF bank")
+        from repro.models.cnn import cnn_cloud, cnn_edge  # local: avoid cycle
+        self.params = params
+        self.baf_bank = {int(c): (p, jnp.asarray(np.asarray(s), jnp.int32))
+                         for c, (p, s) in baf_bank.items()}
+        self.channel = channel
+        self.controller = controller
+        if default_op is None:
+            c = max(self.baf_bank)
+            default_op = OperatingPoint(c=c, bits=8)
+        if default_op.c not in self.baf_bank:
+            raise ValueError(f"no BaF predictor for C={default_op.c}")
+        self.default_op = default_op
+        self.backend = backend
+        self.max_batch = max_batch
+        self.fused = fused
+        self._edge_fn = jax.jit(lambda p, img: cnn_edge(p, img)[1])
+        self._cloud_fn = jax.jit(cnn_cloud)
+
+    # -- edge side ----------------------------------------------------------
+    def _pick_op(self, t_submit: float) -> OperatingPoint:
+        if self.controller is None:
+            return self.default_op
+        budget = (self.channel.budget_remaining(at=t_submit)
+                  if self.channel is not None else None)
+        rd = self.controller.select(budget)
+        if rd.op.c not in self.baf_bank:
+            raise ValueError(f"RD table picked C={rd.op.c} with no BaF "
+                             f"predictor in the bank {sorted(self.baf_bank)}")
+        return rd.op
+
+    def encode_request(self, img, t_submit: float = 0.0):
+        """Edge-side work for one request: rate control + encode + transmit.
+
+        img: (1, H, W, 3). Returns (op, EncodedTensor, SplitStats, Transmission).
+        """
+        op = self._pick_op(t_submit)
+        _, sel_idx = self.baf_bank[op.c]
+        z = self._edge_fn(self.params, img)
+        enc, stats = encode_activation(z, sel_idx, op.bits,
+                                       backend=self.backend)
+        if self.channel is not None:
+            tx = self.channel.transmit(stats.total_bits, t_submit)
+        else:
+            tx = Transmission(bits=stats.total_bits, t_submit=t_submit,
+                              t_start=t_submit, t_arrive=t_submit)
+        return op, enc, stats, tx
+
+    # -- cloud side ---------------------------------------------------------
+    def _restore(self, key, codes, mins, maxs):
+        baf_params, sel_idx = self.baf_bank[key.c]
+        if self.fused:
+            return restore_codes_fused(baf_params, self.params["split"],
+                                       sel_idx, codes, mins, maxs,
+                                       bits=key.bits)
+        return restore_codes(baf_params, self.params["split"], sel_idx,
+                             codes, mins, maxs, bits=key.bits,
+                             consolidation=True)
+
+    def _process_batch(self, batch: MicroBatch, responses: list,
+                       telemetry: Telemetry) -> None:
+        t_dispatch = max(r.t_arrive for r in batch.requests)
+        t0 = time.perf_counter()
+        z_tilde = self._restore(batch.key, jnp.asarray(batch.codes),
+                                jnp.asarray(batch.mins),
+                                jnp.asarray(batch.maxs))
+        logits = self._cloud_fn(self.params, z_tilde)
+        logits = np.asarray(jax.block_until_ready(logits))
+        compute_s = time.perf_counter() - t0
+        for row, req in enumerate(batch.requests):      # padding rows ignored
+            op, stats, tx = req.meta
+            responses[req.req_id] = GatewayResponse(
+                req_id=req.req_id, logits=logits[row], op=op, stats=stats)
+            telemetry.record(RequestRecord(
+                req_id=req.req_id, c=op.c, bits=op.bits,
+                bits_on_wire=stats.total_bits,
+                wire_latency_s=tx.latency_s,
+                queue_wait_s=t_dispatch - req.t_arrive,
+                compute_s=compute_s,
+                batch_size=len(batch.requests),
+                padded_size=batch.padded_size))
+
+    # -- orchestration loop -------------------------------------------------
+    def serve(self, imgs, *, submit_times=None) -> tuple[list[GatewayResponse],
+                                                         Telemetry]:
+        """Serve one request per row of ``imgs`` (N, H, W, 3).
+
+        Responses come back in submission order regardless of channel
+        reordering or batching; telemetry holds the per-request records.
+        """
+        imgs = np.asarray(imgs)
+        n = imgs.shape[0]
+        if submit_times is None:
+            submit_times = [0.0] * n
+        # 1. edge side: rate control, encode, transmit — in submit-time order
+        # (the simulated link is FIFO by call, so out-of-order calls would
+        # charge early requests for wire time the late ones occupied)
+        inflight = []
+        for i in sorted(range(n), key=lambda k: float(submit_times[k])):
+            op, enc, stats, tx = self.encode_request(imgs[i:i + 1],
+                                                     float(submit_times[i]))
+            inflight.append((i, op, enc, stats, tx))
+        # 2. cloud side: decode in arrival order, micro-batch, restore, respond
+        inflight.sort(key=lambda item: (item[4].t_arrive, item[0]))
+        responses: list[GatewayResponse | None] = [None] * n
+        telemetry = Telemetry()
+        batcher = MicroBatcher(max_batch=self.max_batch)
+        for i, op, enc, stats, tx in inflight:
+            blob = enc.to_bytes()                        # real wire round-trip
+            codes, mins, maxs = decode_stream(
+                wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
+            req = DecodedRequest(
+                req_id=i, codes=np.asarray(codes), mins=np.asarray(mins),
+                maxs=np.asarray(maxs), c=op.c, bits=op.bits,
+                t_arrive=tx.t_arrive, meta=(op, stats, tx))
+            for full in batcher.add(req):
+                self._process_batch(full, responses, telemetry)
+        for rest in batcher.flush():
+            self._process_batch(rest, responses, telemetry)
+        assert all(r is not None for r in responses)
+        return responses, telemetry

@@ -1,0 +1,115 @@
+"""Adaptive rate control for split inference — pick ``(C, bits)`` per request.
+
+The paper sweeps C (transmitted channels) and n (quantizer bits) offline and
+reports the accuracy/bits trade-off; deployment needs the inverse mapping:
+given the channel's current bit budget and a quality floor, which operating
+point do we run *this* request at?  Following the bit-allocation line of work
+(Alvar & Bajić 2020; Choi & Bajić 2018) we build an offline rate–distortion
+table by sweeping the existing fidelity metrics, then do a table lookup per
+request:
+
+  * ``cheapest_meeting_floor`` — the paper-style planner: minimum wire bits
+    subject to PSNR >= floor (no channel in the loop),
+  * ``select(bit_budget)``     — the channel-adaptive policy: among points
+    that fit the budget, prefer those meeting the quality floor and take the
+    **highest-PSNR** one (spend the rate the channel grants); if none meeting
+    the floor fit, degrade to the best PSNR that fits; if nothing fits,
+    send the globally cheapest point rather than dropping the request.
+
+The table is plain data, so tests pin behaviour on a hand-written table and
+production builds one with :func:`build_rd_table`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    c: int          # transmitted channels (power of two; tiling constraint)
+    bits: int       # quantizer depth n
+
+
+@dataclass(frozen=True)
+class RDPoint:
+    op: OperatingPoint
+    bits_per_example: float    # measured wire cost: payload + C*32 side info
+    psnr_db: float             # restoration quality (higher is better)
+    kl: float = math.nan       # KL(cloud || split) of downstream logits
+
+
+class RateController:
+    """Table-driven operating-point selection with a PSNR quality floor."""
+
+    def __init__(self, table: list[RDPoint], *, quality_floor_db: float):
+        if not table:
+            raise ValueError("empty rate-distortion table")
+        self.table = sorted(table, key=lambda p: (p.bits_per_example,
+                                                  -p.psnr_db))
+        self.quality_floor_db = quality_floor_db
+
+    # -- offline planner ----------------------------------------------------
+    def cheapest_meeting_floor(self) -> RDPoint:
+        """Minimum-rate point with PSNR >= floor (paper-style operating point).
+
+        Falls back to the highest-PSNR point when nothing meets the floor.
+        """
+        for p in self.table:                      # sorted by cost
+            if p.psnr_db >= self.quality_floor_db:
+                return p
+        return max(self.table, key=lambda p: p.psnr_db)
+
+    # -- per-request, channel-adaptive policy -------------------------------
+    def select(self, bit_budget: float | None = None) -> RDPoint:
+        """Pick the operating point for one request given the channel budget.
+
+        ``bit_budget=None`` (or inf) means unmetered: equivalent to the full
+        table. See module docstring for the 3-tier policy.
+        """
+        budget = math.inf if bit_budget is None else bit_budget
+        fitting = [p for p in self.table if p.bits_per_example <= budget]
+        if not fitting:
+            return self.table[0]                  # cheapest overall
+        meeting = [p for p in fitting if p.psnr_db >= self.quality_floor_db]
+        pool = meeting if meeting else fitting
+        # highest quality the budget allows; break PSNR ties toward fewer bits
+        return max(pool, key=lambda p: (p.psnr_db, -p.bits_per_example))
+
+
+def build_rd_table(params, baf_bank: dict, imgs, *,
+                   bits_sweep=(2, 4, 6, 8), backend: str = "zlib",
+                   consolidation: bool = True) -> list[RDPoint]:
+    """Offline (C, bits) sweep with the repo's own fidelity metrics.
+
+    params   : CNN params (models/cnn.py)
+    baf_bank : {c: (baf_params, sel_idx)} — one trained BaF predictor per C
+               (the BaF net's input width is C, so each C needs its own)
+    imgs     : (B, H, W, 3) calibration batch the costs/metrics are measured on
+    """
+    from repro.core.split import encode_activation, fidelity_metrics
+    from repro.models.cnn import cnn_edge
+
+    edge = jax.jit(lambda p, i: cnn_edge(p, i)[1])
+    z = edge(params, imgs)
+    table = []
+    for c, (baf_params, sel_idx) in sorted(baf_bank.items()):
+        for bits in bits_sweep:
+            # cost at deployment granularity: the gateway transmits one image
+            # per request, and a shared zlib stream over the whole batch would
+            # understate that — encode each example alone and average
+            per_req_bits = [
+                encode_activation(z[i:i + 1], sel_idx, bits,
+                                  backend=backend)[1].total_bits
+                for i in range(imgs.shape[0])]
+            psnr, kl = fidelity_metrics(params, baf_params, sel_idx, imgs,
+                                        bits=bits, consolidation=consolidation,
+                                        z=z)
+            table.append(RDPoint(
+                op=OperatingPoint(c=c, bits=bits),
+                bits_per_example=float(np.mean(per_req_bits)),
+                psnr_db=float(psnr), kl=float(kl)))
+    return table

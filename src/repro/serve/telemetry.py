@@ -1,0 +1,87 @@
+"""Per-request and aggregate serving telemetry for the gateway.
+
+Wire-side numbers (bits on wire, channel latency, queue wait) come from the
+simulated channel's virtual clock; compute-side numbers (restore + cloud
+forward) are measured wall clock. ``total_latency_s`` adds the two — the
+simulated transport and the real compute — which is the quantity the
+benchmark reports percentiles over.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    req_id: int
+    c: int
+    bits: int
+    bits_on_wire: int
+    wire_latency_s: float       # submit -> arrival at the cloud (simulated)
+    queue_wait_s: float         # arrival -> micro-batch dispatch (simulated)
+    compute_s: float            # restore + cloud forward (measured, per batch)
+    batch_size: int             # true (unpadded) size of the micro-batch
+    padded_size: int
+
+    @property
+    def total_latency_s(self) -> float:
+        return self.wire_latency_s + self.queue_wait_s + self.compute_s
+
+
+class Telemetry:
+    """Accumulates request records and reports aggregate percentiles."""
+
+    def __init__(self):
+        self.records: list[RequestRecord] = []
+
+    def record(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def percentile(self, field_name: str, p: float) -> float:
+        vals = [getattr(r, field_name) for r in self.records]
+        if not vals:
+            raise ValueError("no records")
+        return float(np.percentile(np.asarray(vals, np.float64), p))
+
+    def summary(self, *, wall_s: float | None = None) -> dict:
+        """Aggregate view; pass the measured wall time for requests/sec."""
+        if not self.records:
+            return {"count": 0}
+        out = {
+            "count": len(self.records),
+            "mean_bits_on_wire": float(np.mean([r.bits_on_wire
+                                                for r in self.records])),
+            "mean_batch_size": float(np.mean([r.batch_size
+                                              for r in self.records])),
+            "p50_latency_s": self.percentile("total_latency_s", 50),
+            "p99_latency_s": self.percentile("total_latency_s", 99),
+            "p50_compute_s": self.percentile("compute_s", 50),
+            "p99_compute_s": self.percentile("compute_s", 99),
+            "operating_points": sorted({(r.c, r.bits) for r in self.records}),
+        }
+        if wall_s is not None and wall_s > 0:
+            out["requests_per_s"] = len(self.records) / wall_s
+        return out
+
+    def format_summary(self, *, wall_s: float | None = None) -> str:
+        s = self.summary(wall_s=wall_s)
+        if not s["count"]:
+            return "no requests"
+        lines = [f"requests           : {s['count']}"]
+        if "requests_per_s" in s:
+            lines.append(f"requests/sec       : {s['requests_per_s']:.1f}")
+        lines += [
+            f"mean bits on wire  : {s['mean_bits_on_wire']:.0f}",
+            f"mean batch size    : {s['mean_batch_size']:.2f}",
+            f"p50 / p99 latency  : {s['p50_latency_s']*1e3:.2f} / "
+            f"{s['p99_latency_s']*1e3:.2f} ms",
+            f"p50 / p99 compute  : {s['p50_compute_s']*1e3:.2f} / "
+            f"{s['p99_compute_s']*1e3:.2f} ms",
+            f"operating points   : {s['operating_points']}",
+        ]
+        return "\n".join(lines)

@@ -1,7 +1,7 @@
 """Wire codec: n-bit packing, entropy coding, paper-style bit accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import codec as wire
 from repro.core.quant import QuantParams
@@ -76,3 +76,68 @@ def test_property_entropy_is_compression_lower_bound_ish(seed):
     enc = wire.encode(codes, qp, backend="zlib")
     h = wire.empirical_entropy_bits(codes, 2)
     assert 8 * len(enc.payload) >= 0.5 * h
+
+
+# ---------------------------------------------------------------------------
+# Hardening + header integrity (serving-gateway PR satellites)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["zlib", "raw"])
+@pytest.mark.parametrize("bits", [3, 5, 6])
+def test_roundtrip_odd_bit_widths(rng, backend, bits):
+    codes = rng.integers(0, 1 << bits, size=(5, 7, 4)).astype(np.uint8)
+    qp = _qp(4, bits, rng)
+    dec, dec_qp = wire.decode(wire.EncodedTensor.from_bytes(
+        wire.encode(codes, qp, backend=backend).to_bytes()))
+    assert np.array_equal(dec, codes)
+    assert dec_qp.bits == bits
+
+
+@pytest.mark.parametrize("backend", ["zlib", "raw"])
+def test_roundtrip_single_element(rng, backend):
+    codes = np.asarray([[3]], np.uint8)
+    qp = _qp(1, 4, rng)
+    dec, _ = wire.decode(wire.encode(codes, qp, backend=backend))
+    assert dec.shape == (1, 1) and dec[0, 0] == 3
+
+
+def test_header_integrity_multidim(rng):
+    shape = (2, 3, 4, 5)
+    codes = rng.integers(0, 64, size=shape).astype(np.uint8)
+    qp = _qp(5, 6, rng)
+    enc = wire.encode(codes, qp, backend="raw")
+    enc2 = wire.EncodedTensor.from_bytes(enc.to_bytes())
+    assert enc2.shape == shape
+    assert enc2.bits == 6 and enc2.backend == "raw"
+    assert enc2.side_info == enc.side_info
+    assert enc2.payload == enc.payload
+    dec, _ = wire.decode(enc2)
+    assert dec.shape == shape and np.array_equal(dec, codes)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_unpack_bits_rejects_short_stream(bits):
+    codes = np.arange(16, dtype=np.uint16) % (1 << min(bits, 8))
+    data = wire.pack_bits(codes, bits)
+    with pytest.raises(ValueError, match="too short"):
+        wire.unpack_bits(data[:-1], bits, 16)
+
+
+def test_png_rejects_negative_codes(rng):
+    qp = _qp(4, 8, rng)
+    with pytest.raises(ValueError, match="negative"):
+        wire.encode(np.full((4, 4), -1, np.int32), qp, backend="png")
+
+
+def test_png_rejects_codes_over_8_bits(rng):
+    qp = _qp(4, 8, rng)
+    with pytest.raises(ValueError, match="fit in"):
+        wire.encode(np.full((4, 4), 300, np.int32), qp, backend="png")
+
+
+def test_png_roundtrip_still_works(rng):
+    codes = rng.integers(0, 256, size=(8, 8)).astype(np.uint8)
+    qp = _qp(8, 8, rng)
+    enc = wire.encode(codes, qp, backend="png")
+    dec, _ = wire.decode(wire.EncodedTensor.from_bytes(enc.to_bytes()))
+    assert np.array_equal(dec.reshape(8, 8), codes)

@@ -1,0 +1,265 @@
+"""Serving gateway: channel model, rate control, micro-batcher, end to end."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.yolo_baf import smoke_config, smoke_data_config
+from repro.core.baf import BaFConvConfig, init_baf_conv
+from repro.data.synthetic import shapes_batch_iterator
+from repro.models.cnn import init_cnn
+from repro.serve import (ChannelConfig, DecodedRequest, MicroBatcher,
+                         OperatingPoint, RateController, RDPoint,
+                         ServingGateway, SimulatedChannel, bucket_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Channel model
+# ---------------------------------------------------------------------------
+
+def test_channel_latency_is_serialization_plus_propagation():
+    ch = SimulatedChannel(ChannelConfig(bandwidth_bps=1000, base_latency_s=0.5))
+    tx = ch.transmit(1000, t_submit=0.0)
+    assert tx.t_start == 0.0
+    assert tx.t_arrive == pytest.approx(1.0 + 0.5)
+
+
+def test_channel_serializes_back_to_back_transmissions():
+    ch = SimulatedChannel(ChannelConfig(bandwidth_bps=1000, base_latency_s=0.0))
+    a = ch.transmit(1000, t_submit=0.0)     # occupies the wire until t=1
+    b = ch.transmit(1000, t_submit=0.0)     # must wait for a
+    assert b.t_start == pytest.approx(a.t_submit + 1.0)
+    assert b.queue_wait_s == pytest.approx(1.0)
+
+
+def test_channel_is_deterministic_under_seed():
+    cfg = ChannelConfig(bandwidth_bps=5000, base_latency_s=0.01, jitter_s=0.02)
+    runs = []
+    for _ in range(2):
+        ch = SimulatedChannel(cfg, seed=42)
+        runs.append([ch.transmit(512).t_arrive for _ in range(5)])
+    assert runs[0] == runs[1]
+    ch = SimulatedChannel(cfg, seed=7)
+    assert [ch.transmit(512).t_arrive for _ in range(5)] != runs[0]
+
+
+def test_channel_tick_budget_defers_transmission():
+    cfg = ChannelConfig(bandwidth_bps=1e9, base_latency_s=0.0, tick_s=1.0,
+                        budget_bits_per_tick=1000)
+    ch = SimulatedChannel(cfg)
+    assert ch.budget_remaining() == 1000
+    ch.transmit(900, t_submit=0.0)
+    assert ch.budget_remaining(at=0.0) == 100
+    late = ch.transmit(500, t_submit=0.0)   # does not fit tick 0's remainder
+    assert late.t_start >= 1.0              # deferred to the next tick
+
+
+def test_channel_spanning_packet_waits_for_budget_grants():
+    """A packet bigger than a whole tick budget drains several ticks and can
+    only finish once the tick granting its last bits opens — fast wires do
+    not let it tunnel through the cap."""
+    cfg = ChannelConfig(bandwidth_bps=1e9, base_latency_s=0.0, tick_s=1.0,
+                        budget_bits_per_tick=1000)
+    ch = SimulatedChannel(cfg)
+    big = ch.transmit(2500, t_submit=0.0)   # spans ticks 0, 1, 2
+    assert big.t_arrive >= 2.0
+    # ticks 0-2 are spent: the next packet waits for tick 3
+    nxt = ch.transmit(1000, t_submit=0.0)
+    assert nxt.t_start >= 3.0
+
+
+# ---------------------------------------------------------------------------
+# Rate controller on a fixed, documented RD table
+# ---------------------------------------------------------------------------
+
+FIXED_TABLE = [
+    RDPoint(OperatingPoint(c=4, bits=2), bits_per_example=1_000, psnr_db=12.0),
+    RDPoint(OperatingPoint(c=8, bits=4), bits_per_example=4_000, psnr_db=20.0),
+    RDPoint(OperatingPoint(c=8, bits=8), bits_per_example=8_000, psnr_db=26.0),
+    RDPoint(OperatingPoint(c=16, bits=8), bits_per_example=16_000, psnr_db=30.0),
+]
+
+
+def test_controller_cheapest_meeting_floor():
+    rc = RateController(FIXED_TABLE, quality_floor_db=19.0)
+    assert rc.cheapest_meeting_floor().op == OperatingPoint(c=8, bits=4)
+    # floor above every point -> best available quality
+    rc = RateController(FIXED_TABLE, quality_floor_db=99.0)
+    assert rc.cheapest_meeting_floor().op == OperatingPoint(c=16, bits=8)
+
+
+def test_controller_spends_the_budget_for_quality():
+    rc = RateController(FIXED_TABLE, quality_floor_db=19.0)
+    # unmetered: best quality point overall
+    assert rc.select(None).op == OperatingPoint(c=16, bits=8)
+    # generous budget: same
+    assert rc.select(20_000).op == OperatingPoint(c=16, bits=8)
+    # halved budget: best floor-meeting point that still fits
+    assert rc.select(10_000).op == OperatingPoint(c=8, bits=8)
+    assert rc.select(5_000).op == OperatingPoint(c=8, bits=4)
+
+
+def test_controller_degrades_below_floor_rather_than_dropping():
+    rc = RateController(FIXED_TABLE, quality_floor_db=19.0)
+    # only the sub-floor point fits -> serve it (flagged by its psnr)
+    pick = rc.select(2_000)
+    assert pick.op == OperatingPoint(c=4, bits=2)
+    assert pick.psnr_db < rc.quality_floor_db
+    # nothing fits at all -> cheapest overall, never a drop
+    assert rc.select(10).op == OperatingPoint(c=4, bits=2)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher
+# ---------------------------------------------------------------------------
+
+def _req(req_id, c=8, bits=8, h=4, w=4, fill=None):
+    fill = req_id if fill is None else fill
+    return DecodedRequest(
+        req_id=req_id,
+        codes=np.full((1, h, w, c), fill % 251, np.uint8),
+        mins=np.zeros((1, 1, 1, c), np.float16),
+        maxs=np.ones((1, 1, 1, c), np.float16),
+        c=c, bits=bits)
+
+
+def test_bucket_sizes_are_powers_of_two_up_to_cap():
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    assert bucket_sizes(6) == (1, 2, 4, 6)
+    assert bucket_sizes(1) == (1,)
+
+
+def test_batcher_flushes_full_groups_and_pads_remainders():
+    mb = MicroBatcher(max_batch=4)
+    flushed = []
+    for i in range(6):
+        flushed += mb.add(_req(i))
+    assert len(flushed) == 1 and flushed[0].padded_size == 4
+    assert flushed[0].pad == 0
+    rest = mb.flush()
+    assert len(rest) == 1
+    assert [r.req_id for r in rest[0].requests] == [4, 5]
+    assert rest[0].padded_size == 2 and rest[0].pad == 0
+    assert len(mb) == 0
+
+
+def test_batcher_pads_to_next_bucket():
+    mb = MicroBatcher(max_batch=8)
+    for i in range(3):
+        mb.add(_req(i))
+    (b,) = mb.flush()
+    assert b.padded_size == 4 and b.pad == 1
+    # padding repeats the last row, so restore shapes stay bucketed
+    assert np.array_equal(b.codes[3], b.codes[2])
+
+
+def test_batcher_groups_by_operating_point():
+    mb = MicroBatcher(max_batch=8)
+    mb.add(_req(0, c=8, bits=8))
+    mb.add(_req(1, c=8, bits=4))
+    mb.add(_req(2, c=4, bits=8))
+    batches = mb.flush()
+    assert len(batches) == 3
+    assert {b.key.c for b in batches} == {4, 8}
+
+
+def test_batcher_preserves_request_identity_under_shuffled_arrival(rng):
+    mb = MicroBatcher(max_batch=4)
+    order = rng.permutation(12)
+    batches = []
+    for i in order:
+        batches += mb.add(_req(int(i)))
+    batches += mb.flush()
+    seen = {}
+    for b in batches:
+        for row, req in enumerate(b.requests):
+            # each row of the batch is that request's own payload
+            assert int(b.codes[row, 0, 0, 0]) == req.req_id % 251
+            seen[req.req_id] = True
+    assert sorted(seen) == list(range(12))
+
+
+# ---------------------------------------------------------------------------
+# Gateway end to end (tiny system)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_bank():
+    cnn_cfg = smoke_config()._replace(input_size=32)
+    data_cfg = smoke_data_config()._replace(image_size=32, batch_size=8)
+    params = init_cnn(jax.random.PRNGKey(0), cnn_cfg)
+    bank = {}
+    for c in (4, 8):
+        baf = init_baf_conv(jax.random.PRNGKey(c),
+                            BaFConvConfig(c=c, q=cnn_cfg.split_q, hidden=8))
+        bank[c] = (baf, np.arange(c))
+    imgs, _ = next(shapes_batch_iterator(data_cfg, seed=5))
+    return params, bank, np.asarray(imgs)
+
+
+def test_gateway_round_trips_and_orders_responses(tiny_bank):
+    params, bank, imgs = tiny_bank
+    gw = ServingGateway(params, bank, default_op=OperatingPoint(c=8, bits=8),
+                        max_batch=4)
+    responses, tel = gw.serve(imgs)
+    assert [r.req_id for r in responses] == list(range(len(imgs)))
+    assert all(np.isfinite(r.logits).all() for r in responses)
+    assert len(tel) == len(imgs)
+    assert tel.summary()["mean_batch_size"] == 4.0
+
+
+def test_gateway_batched_matches_one_at_a_time(tiny_bank):
+    """Micro-batching is an execution detail: logits must match naive serving."""
+    params, bank, imgs = tiny_bank
+    op = OperatingPoint(c=8, bits=8)
+    batched = ServingGateway(params, bank, default_op=op, max_batch=4)
+    naive = ServingGateway(params, bank, default_op=op, max_batch=1)
+    r_b, _ = batched.serve(imgs)
+    r_n, _ = naive.serve(imgs)
+    for a, b in zip(r_b, r_n):
+        np.testing.assert_allclose(a.logits, b.logits, atol=1e-5, rtol=1e-5)
+
+
+def test_gateway_fused_restore_matches_reference(tiny_bank):
+    params, bank, imgs = tiny_bank
+    op = OperatingPoint(c=8, bits=4)
+    fused = ServingGateway(params, bank, default_op=op, max_batch=4, fused=True)
+    ref = ServingGateway(params, bank, default_op=op, max_batch=4, fused=False)
+    r_f, _ = fused.serve(imgs)
+    r_r, _ = ref.serve(imgs)
+    for a, b in zip(r_f, r_r):
+        np.testing.assert_allclose(a.logits, b.logits, atol=1e-5, rtol=1e-5)
+
+
+def test_gateway_adapts_operating_point_to_channel_budget(tiny_bank):
+    """Tight per-tick budget must push the controller to a cheaper (C, bits)."""
+    params, bank, imgs = tiny_bank
+    table = [
+        RDPoint(OperatingPoint(c=4, bits=2), bits_per_example=600, psnr_db=12.0),
+        RDPoint(OperatingPoint(c=8, bits=8), bits_per_example=3_000, psnr_db=25.0),
+    ]
+    rc = RateController(table, quality_floor_db=10.0)
+    wide = ServingGateway(
+        params, bank, controller=rc,
+        channel=SimulatedChannel(ChannelConfig(budget_bits_per_tick=100_000)))
+    tight = ServingGateway(
+        params, bank, controller=rc,
+        channel=SimulatedChannel(ChannelConfig(budget_bits_per_tick=2_000)))
+    r_wide, _ = wide.serve(imgs[:2])
+    r_tight, _ = tight.serve(imgs[:2])
+    assert r_wide[0].op == OperatingPoint(c=8, bits=8)
+    assert r_tight[0].op == OperatingPoint(c=4, bits=2)
+
+
+def test_gateway_telemetry_accounts_wire_and_queue(tiny_bank):
+    params, bank, imgs = tiny_bank
+    ch = SimulatedChannel(ChannelConfig(bandwidth_bps=1e5, base_latency_s=0.01))
+    gw = ServingGateway(params, bank, default_op=OperatingPoint(c=8, bits=8),
+                        channel=ch, max_batch=4)
+    _, tel = gw.serve(imgs[:4])
+    for rec in tel.records:
+        assert rec.wire_latency_s > 0.01          # serialization happened
+        assert rec.queue_wait_s >= 0.0
+        assert rec.total_latency_s >= rec.wire_latency_s + rec.compute_s
+    # the shared uplink serializes: later requests waited longer on the wire
+    lat = [r.wire_latency_s for r in sorted(tel.records, key=lambda r: r.req_id)]
+    assert lat[-1] > lat[0]

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.quant import (bin_bounds, compute_quant_params, dequantize,
                               quantization_mse, quantize)

@@ -1,7 +1,7 @@
 """Paper §3.1 eqs. (2)-(3): correlation-based channel selection."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.selection import (accumulate_correlation, correlation_matrix_conv,
                                   correlation_matrix_stream, select_channels,
