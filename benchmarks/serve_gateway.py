@@ -1,14 +1,22 @@
-"""Gateway serving benchmark: micro-batched vs one-at-a-time split inference.
+"""Gateway serving benchmark: micro-batching + multi-tenant scheduling.
 
     PYTHONPATH=src python benchmarks/serve_gateway.py [--smoke] [--requests N]
 
-Measures the cloud side of the serving gateway (decode -> micro-batch ->
-jitted BaF restore + fused consolidation -> cloud forward) under a stream of
-single-image requests, for max_batch in {1, 4, 8}:
+Part 1 (single-tenant, as in PR 1) measures the cloud side of the serving
+gateway (decode -> micro-batch -> jitted BaF restore + fused consolidation ->
+cloud forward) under a stream of single-image requests, for max_batch in
+{1, 4, 8}:
 
   * requests/sec end to end (encode + wire + cloud, wall clock),
   * requests/sec of the cloud compute alone (what batching actually targets),
   * p50/p99 total latency (simulated wire + measured compute).
+
+Part 2 (multi-tenant, event-driven) sweeps the same total traffic over
+1/4/16 tenants through MultiTenantGateway (DRR uplink scheduling + shared
+bucket micro-batching) and reports aggregate cloud throughput, Jain
+fairness over per-tenant wire bits, and each tenant's p99 vs its solo p99.
+Acceptance gates (ISSUE 2): 16-tenant aggregate restore throughput within
+20% of the single-tenant batched path; no tenant p99 above 3x its solo p99.
 
 Weights are untrained — throughput and compile behaviour do not depend on
 training. Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py
@@ -30,8 +38,9 @@ from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.core.baf import BaFConvConfig, init_baf_conv
 from repro.data.synthetic import shapes_batch_iterator
 from repro.models.cnn import init_cnn
-from repro.serve import (ChannelConfig, OperatingPoint, ServingGateway,
-                         SimulatedChannel)
+from repro.serve import (ChannelConfig, MultiTenantGateway, OperatingPoint,
+                         ServingGateway, SimulatedChannel, TenantRequest,
+                         TenantSpec)
 
 _ROWS: list[str] = []
 
@@ -91,6 +100,70 @@ def bench_mode(params, bank, imgs, *, max_batch: int, c: int):
     }
 
 
+def _tenant_workload(imgs, names, dt=0.0005):
+    return [TenantRequest(tenant=names[i % len(names)], img=imgs[i],
+                          t_submit=dt * i) for i in range(len(imgs))]
+
+
+def _cloud_rps(tel, n):
+    cloud_s = sum(r.compute_s / r.batch_size for r in tel.records)
+    return n / cloud_s
+
+
+def bench_tenants(params, bank, imgs, *, n_tenants: int, c: int,
+                  max_batch: int = 8):
+    """Same total traffic spread over ``n_tenants``; per-tenant p99 is also
+    measured solo (tenant 0's slice alone) for the interference bound."""
+    op = OperatingPoint(c=c, bits=8)
+    names = [f"t{i}" for i in range(n_tenants)]
+
+    def make_gateway(tenant_names):
+        return MultiTenantGateway(
+            params, bank,
+            tenants=[TenantSpec(n) for n in tenant_names],
+            channel_cfg=ChannelConfig(bandwidth_bps=20e6,
+                                      base_latency_s=0.005),
+            default_op=op, max_batch=max_batch,
+            budget_bits_per_tick=None,    # uplink fabric not the bottleneck
+            tick_s=0.01, batch_window_s=0.005)
+
+    gw = make_gateway(names)
+    work = _tenant_workload(imgs, names)
+    # warm every bucket size the measured run can hit: bursts of 1/2/4/8
+    # identical-op requests, spaced far beyond the batch window so each
+    # burst flushes at exactly its own padded size
+    warm, t = [], 0.0
+    for burst in (1, 2, 4, 8):
+        warm += [TenantRequest(names[0], imgs[i % len(imgs)], t)
+                 for i in range(burst)]
+        t += 1.0
+    gw.serve_tenants(warm)
+    t0 = time.perf_counter()
+    _, tel = gw.serve_tenants(work)
+    wall = time.perf_counter() - t0
+
+    # solo baseline: tenant 0's slice, served alone on the same config
+    solo_work = [TenantRequest("t0", w.img, w.t_submit)
+                 for w in work if w.tenant == "t0"]
+    solo_gw = make_gateway(["t0"])
+    _, solo_tel = solo_gw.serve_tenants(solo_work)   # caches already warm
+    solo_p99 = solo_tel.percentile("total_latency_s", 99, tenant="t0")
+
+    per = tel.per_tenant()
+    worst_p99 = max(ts["p99_latency_s"] for ts in per.values())
+    return {
+        "tenants": n_tenants,
+        "requests": len(work),
+        "wall_s": wall,
+        "rps_cloud_compute": _cloud_rps(tel, len(work)),
+        "fairness_bits": tel.fairness("bits_on_wire"),
+        "worst_p99_ms": worst_p99 * 1e3,
+        "solo_p99_ms": solo_p99 * 1e3,
+        "p99_vs_solo": worst_p99 / max(solo_p99, 1e-9),
+        "mean_batch": float(np.mean([r.batch_size for r in tel.records])),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=None)
@@ -123,6 +196,33 @@ def main():
     if speed4 <= 1.0:
         print("WARNING: micro-batching showed no cloud-compute win at "
               "batch=4 on this host", flush=True)
+
+    # -- part 2: multi-tenant sweep (event-driven gateway) ------------------
+    for n_tenants in (1, 4, 16):
+        r = bench_tenants(params, bank, imgs, n_tenants=n_tenants, c=c)
+        results[f"tenants_{n_tenants}"] = r
+        _row(f"gateway_t{n_tenants}", 1e6 * r["wall_s"] / r["requests"],
+             f"cloud_rps={r['rps_cloud_compute']:.1f} "
+             f"fairness={r['fairness_bits']:.3f} "
+             f"worst_p99={r['worst_p99_ms']:.2f}ms "
+             f"(solo {r['solo_p99_ms']:.2f}ms, "
+             f"x{r['p99_vs_solo']:.2f}) mean_batch={r['mean_batch']:.2f}")
+
+    t1, t16 = results["tenants_1"], results["tenants_16"]
+    tp_ratio = t16["rps_cloud_compute"] / t1["rps_cloud_compute"]
+    results["throughput_16v1"] = tp_ratio
+    ok_tp = tp_ratio >= 0.8
+    ok_p99 = all(results[f"tenants_{n}"]["p99_vs_solo"] <= 3.0
+                 for n in (1, 4, 16))
+    results["acceptance_throughput"] = ok_tp
+    results["acceptance_p99"] = ok_p99
+    _row("gateway_tenancy_check", 0.0,
+         f"16-tenant/1-tenant cloud throughput {tp_ratio:.2f} "
+         f"({'OK' if ok_tp else 'FAIL'} >= 0.8); p99 <= 3x solo: "
+         f"{'OK' if ok_p99 else 'FAIL'}")
+    if not (ok_tp and ok_p99):
+        print("WARNING: multi-tenant acceptance gate failed on this host",
+              flush=True)
 
     out = os.path.join(os.path.dirname(__file__),
                        "serve_gateway_results.json")

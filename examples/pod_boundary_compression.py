@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.core.baf import BaFStreamConfig, init_baf_stream
 from repro.distributed.pipeline import (compressed_pod_transfer,
                                         subset_pod_transfer, wire_bytes)
@@ -25,7 +26,7 @@ B, S, D, C = 4, 64, 256, 64
 
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (B, S, D), jnp.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     xs = jax.device_put(x, NamedSharding(mesh, P()))
 
     # (a) full-tensor n-bit transfer

@@ -26,6 +26,32 @@ from repro.core.quant import QuantParams, compute_quant_params, dequantize, quan
 from repro.core.tiling import tile_batch, untile_batch
 
 
+@dataclass(frozen=True)
+class ActivationStats:
+    """Cheap per-request content descriptor of the selected split channels.
+
+    The quantizer step scales with the content's dynamic range and the PSNR
+    peak follows the content's peak, so these two numbers are enough for the
+    rate controller to shift calibration-time RD-table PSNRs toward *this*
+    request (serve/rate_control.py ContentKeyedController).
+    """
+    peak: float          # max |z_sel| over the example
+    dyn_range: float     # mean over channels of per-channel (max - min)
+
+
+def activation_stats(z, sel_idx) -> ActivationStats:
+    """O(HWC) statistics of ``z[..., sel_idx]`` — no quantize/codec work.
+
+    z: (B, H, W, P) split activation (any leading batch shape); stats are
+    aggregated over the whole array (callers pass one request at a time).
+    """
+    z_sel = np.asarray(z)[..., np.asarray(sel_idx)]
+    flat = z_sel.reshape(-1, z_sel.shape[-1]).astype(np.float32)
+    peak = float(np.max(np.abs(flat))) if flat.size else 0.0
+    rng = float(np.mean(np.max(flat, 0) - np.min(flat, 0))) if flat.size else 0.0
+    return ActivationStats(peak=peak, dyn_range=rng)
+
+
 @dataclass
 class SplitStats:
     total_bits: int

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def seq_sharded_decode_attention(q, cache_k, cache_v, new_k, new_v, length,
         out = _partial_attention(qf[:, :, None, :], ck, cv, ln, axis, s_local)
         return out, ck, cv
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(rep, cache_spec, cache_spec, rep, rep, P()),
         out_specs=(rep, cache_spec, cache_spec),

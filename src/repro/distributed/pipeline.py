@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.baf import baf_stream_predict
 from repro.core.quant import QuantParams
 
@@ -80,8 +81,8 @@ def compressed_pod_transfer(x: jax.Array, mesh, *, bits: int = 8,
         mx = jax.lax.ppermute(mx, pod_axis, perm)
         return _dequantize_stream(codes, mn, mx, bits, dtype)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names={pod_axis}, check_vma=False)(x)
+    return shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                     axis_names={pod_axis}, check_vma=False)(x)
 
 
 def baf_restore_stream(z_hat: jax.Array, *, baf_params, forward_fn: Callable,
@@ -121,5 +122,5 @@ def subset_pod_transfer(x: jax.Array, mesh, *, sel_idx, baf_params,
             codes=codes if consolidation else None,
             qp=qp if consolidation else None, dtype=dtype).astype(dtype)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names={pod_axis}, check_vma=False)(x)
+    return shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                     axis_names={pod_axis}, check_vma=False)(x)

@@ -1,0 +1,46 @@
+"""Pallas API compatibility shim.
+
+The Pallas TPU surface was renamed across jax releases: ``pltpu.CompilerParams``
+(jax >= 0.5 naming, used by current docs) was ``pltpu.TPUCompilerParams``
+before that, and some older releases spell compiler knobs differently again.
+Kernels import the resolved names from here instead of guessing, so the same
+kernel source runs on whatever jax the container bakes in.
+
+    from repro.kernels.compat import CompilerParams, tpu_compiler_params
+
+``tpu_compiler_params(...)`` additionally drops keyword arguments the
+installed class does not accept (e.g. very old jax without
+``dimension_semantics``), degrading to "no hint" rather than crashing —
+the hints are performance metadata, never correctness.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Resolve the compiler-params class across the rename. Newest first.
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:                                        # pragma: no cover - ancient jax
+    CompilerParams = None
+
+if CompilerParams is not None:
+    _ACCEPTED = frozenset(inspect.signature(CompilerParams).parameters)
+else:                                        # pragma: no cover - ancient jax
+    _ACCEPTED = frozenset()
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Build a compiler-params object, dropping unsupported keywords.
+
+    Returns None (callers pass ``compiler_params=None``, which pallas_call
+    accepts) when the installed jax exposes no compiler-params class at all.
+    """
+    if CompilerParams is None:               # pragma: no cover - ancient jax
+        return None
+    return CompilerParams(**{k: v for k, v in kwargs.items()
+                             if k in _ACCEPTED})

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _scan_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, s0_ref,
                  y_ref, sfinal_ref, state_ref, *,
@@ -126,7 +128,7 @@ def linear_scan_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(q, k, v, log_decay, bonus, initial_state)
     return y, sfinal

@@ -23,6 +23,8 @@ import traceback
 
 import jax
 
+from repro.compat import set_mesh
+
 from repro.configs import ARCH_IDS, canonical
 from repro.configs.base import SHAPES
 
@@ -36,7 +38,7 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool, smoke: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     cell = build_cell(arch, shape, mesh, multi_pod=multi_pod, smoke=smoke,
                       tcfg_overrides=tcfg_overrides, overrides=overrides)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings,
                          donate_argnums=cell.donate)

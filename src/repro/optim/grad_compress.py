@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _quantized_psum_one(g: jax.Array, bits: int, axis: str, npod: int):
     levels = (1 << (bits - 1)) - 1            # signed symmetric codes
@@ -57,7 +59,7 @@ def quantized_pod_mean(grads, mesh, *, bits: int = 8, pod_axis: str = "pod"):
         outs = [_quantized_psum_one(g, bits, pod_axis, npod) for g in leaves]
         return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
 
-    means, residuals = jax.shard_map(
+    means, residuals = shard_map(
         f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
         axis_names={pod_axis}, check_vma=False)(*flat)
     return jax.tree.unflatten(treedef, means), jax.tree.unflatten(treedef, residuals)

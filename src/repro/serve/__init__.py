@@ -8,14 +8,20 @@ imported here — use ``from repro.serve.engine import ...`` directly.
 from repro.serve.batcher import (BucketKey, DecodedRequest, MicroBatch,
                                  MicroBatcher, bucket_sizes)
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
-from repro.serve.gateway import GatewayResponse, ServingGateway
-from repro.serve.rate_control import (OperatingPoint, RateController, RDPoint,
-                                      build_rd_table)
-from repro.serve.telemetry import RequestRecord, Telemetry
+from repro.serve.gateway import (GatewayResponse, MultiTenantGateway,
+                                 ServingGateway, TenantRequest)
+from repro.serve.rate_control import (ContentKeyedController, OperatingPoint,
+                                      RateController, RDPoint, build_rd_table)
+from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
+                                   UplinkJob)
+from repro.serve.telemetry import (RequestRecord, Telemetry, jain_fairness)
 
 __all__ = [
     "BucketKey", "DecodedRequest", "MicroBatch", "MicroBatcher",
     "bucket_sizes", "ChannelConfig", "SimulatedChannel", "Transmission",
-    "GatewayResponse", "ServingGateway", "OperatingPoint", "RateController",
-    "RDPoint", "build_rd_table", "RequestRecord", "Telemetry",
+    "GatewayResponse", "MultiTenantGateway", "ServingGateway",
+    "TenantRequest", "ContentKeyedController", "OperatingPoint",
+    "RateController", "RDPoint", "build_rd_table",
+    "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
+    "RequestRecord", "Telemetry", "jain_fairness",
 ]

@@ -43,6 +43,7 @@ class DecodedRequest:
     bits: int
     t_arrive: float = 0.0      # channel arrival (virtual clock)
     meta: Any = None           # opaque caller payload (stats, op point, ...)
+    tenant: str = ""           # owning tenant ("" = single-tenant serving)
 
     @property
     def key(self) -> BucketKey:
@@ -75,31 +76,76 @@ def bucket_sizes(max_batch: int) -> tuple[int, ...]:
 
 
 class MicroBatcher:
-    """Groups decoded requests into padded bucket-shaped micro-batches."""
+    """Groups decoded requests into padded bucket-shaped micro-batches.
 
-    def __init__(self, *, max_batch: int = 8):
+    Buckets are keyed by ``(C, bits, H, W)`` only — NOT by tenant — so
+    heterogeneous multi-tenant traffic at the same operating point shares one
+    bucket and the fused restore + cloud forward stay recompile-free
+    (``DecodedRequest.tenant`` rides along for telemetry/response routing).
+
+    ``window_s`` bounds how long a partially-filled bucket may wait: ``add``
+    stamps each new group with its first arrival, ``deadline(key)`` is when
+    that group must flush, and ``take(key, gen)`` flushes one group by its
+    generation stamp — the event-driven gateway schedules a flush event per
+    group and ``gen`` keeps a stale event from flushing a *newer* group that
+    formed after the original filled up.
+    """
+
+    def __init__(self, *, max_batch: int = 8, window_s: float | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if window_s is not None and window_s < 0:
+            raise ValueError("window_s must be >= 0")
         self.max_batch = max_batch
+        self.window_s = window_s
         self.sizes = bucket_sizes(max_batch)
         self._pending: dict[BucketKey, list[DecodedRequest]] = {}
+        self._opened: dict[BucketKey, tuple[float, int]] = {}  # (t_first, gen)
+        self._gen = 0
 
     def __len__(self) -> int:
         return sum(len(v) for v in self._pending.values())
 
-    def add(self, req: DecodedRequest) -> list[MicroBatch]:
+    def add(self, req: DecodedRequest,
+            now: float | None = None) -> list[MicroBatch]:
         """Enqueue; returns any group that reached max_batch (flushed full)."""
         group = self._pending.setdefault(req.key, [])
+        if not group:
+            self._gen += 1
+            t_first = req.t_arrive if now is None else now
+            self._opened[req.key] = (t_first, self._gen)
         group.append(req)
         if len(group) >= self.max_batch:
             del self._pending[req.key]
+            self._opened.pop(req.key, None)
             return [self._make_batch(req.key, group)]
         return []
+
+    def deadline(self, key: BucketKey) -> tuple[float, int] | None:
+        """(flush-due time, generation) for the group at ``key``; None when
+        no group is open or no window is configured."""
+        if self.window_s is None or key not in self._opened:
+            return None
+        t_first, gen = self._opened[key]
+        return t_first + self.window_s, gen
+
+    def take(self, key: BucketKey,
+             gen: int | None = None) -> MicroBatch | None:
+        """Flush the group at ``key`` now; None when it is gone or, with
+        ``gen`` given, when a different (newer) group occupies the key."""
+        if key not in self._pending:
+            return None
+        if gen is not None and self._opened.get(key, (0.0, -1))[1] != gen:
+            return None
+        group = self._pending.pop(key)
+        self._opened.pop(key, None)
+        return self._make_batch(key, group)
 
     def flush(self) -> list[MicroBatch]:
         """Drain every pending group (end of tick / shutdown)."""
         out = [self._make_batch(k, g) for k, g in self._pending.items()]
         self._pending.clear()
+        self._opened.clear()
         return out
 
     def _make_batch(self, key: BucketKey, group: list[DecodedRequest]) -> MicroBatch:

@@ -58,10 +58,19 @@ class SimulatedChannel:
 
     def __init__(self, cfg: ChannelConfig, *, seed: int = 0):
         self.cfg = cfg
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
         self.now = 0.0                 # virtual clock (advanced by transmits)
         self._busy_until = 0.0         # wire occupied until here
         self._tick_used: dict[int, int] = {}   # tick index -> bits consumed
+
+    def reset(self) -> None:
+        """Back to t=0 with the original seed — two serve runs over one
+        channel replay bit-identically (benchmarks, deterministic tests)."""
+        self._rng = np.random.default_rng(self.seed)
+        self.now = 0.0
+        self._busy_until = 0.0
+        self._tick_used.clear()
 
     # -- budget -------------------------------------------------------------
     def _tick_of(self, t: float) -> int:

@@ -20,6 +20,8 @@ Design points:
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import time
 from dataclasses import dataclass
 
@@ -28,11 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec as wire
-from repro.core.split import (SplitStats, decode_stream, encode_activation,
-                              restore_codes, restore_codes_fused)
+from repro.core.split import (SplitStats, _jitted_cnn_fns, activation_stats,
+                              decode_stream, encode_activation, restore_codes,
+                              restore_codes_fused)
 from repro.serve.batcher import DecodedRequest, MicroBatch, MicroBatcher
-from repro.serve.channel import SimulatedChannel, Transmission
-from repro.serve.rate_control import OperatingPoint, RateController
+from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
+from repro.serve.rate_control import (ContentKeyedController, OperatingPoint,
+                                      RateController)
+from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
+                                   UplinkJob)
 from repro.serve.telemetry import RequestRecord, Telemetry
 
 
@@ -66,7 +72,6 @@ class ServingGateway:
                  fused: bool = True):
         if not baf_bank:
             raise ValueError("empty BaF bank")
-        from repro.models.cnn import cnn_cloud, cnn_edge  # local: avoid cycle
         self.params = params
         self.baf_bank = {int(c): (p, jnp.asarray(np.asarray(s), jnp.int32))
                          for c, (p, s) in baf_bank.items()}
@@ -81,8 +86,10 @@ class ServingGateway:
         self.backend = backend
         self.max_batch = max_batch
         self.fused = fused
-        self._edge_fn = jax.jit(lambda p, img: cnn_edge(p, img)[1])
-        self._cloud_fn = jax.jit(cnn_cloud)
+        # process-wide jitted CNN halves (core.split caches them): gateways
+        # share one trace cache, so spinning up per-tenant/solo gateways in
+        # benchmarks and tests does not recompile per instance
+        self._edge_fn, self._cloud_fn = _jitted_cnn_fns()
 
     # -- edge side ----------------------------------------------------------
     def _pick_op(self, t_submit: float) -> OperatingPoint:
@@ -124,16 +131,20 @@ class ServingGateway:
                              codes, mins, maxs, bits=key.bits,
                              consolidation=True)
 
-    def _process_batch(self, batch: MicroBatch, responses: list,
-                       telemetry: Telemetry) -> None:
-        t_dispatch = max(r.t_arrive for r in batch.requests)
+    def _run_batch(self, batch: MicroBatch) -> tuple[np.ndarray, float]:
+        """Restore + cloud forward for one micro-batch; measured wall time."""
         t0 = time.perf_counter()
         z_tilde = self._restore(batch.key, jnp.asarray(batch.codes),
                                 jnp.asarray(batch.mins),
                                 jnp.asarray(batch.maxs))
         logits = self._cloud_fn(self.params, z_tilde)
         logits = np.asarray(jax.block_until_ready(logits))
-        compute_s = time.perf_counter() - t0
+        return logits, time.perf_counter() - t0
+
+    def _process_batch(self, batch: MicroBatch, responses: list,
+                       telemetry: Telemetry) -> None:
+        t_dispatch = max(r.t_arrive for r in batch.requests)
+        logits, compute_s = self._run_batch(batch)
         for row, req in enumerate(batch.requests):      # padding rows ignored
             op, stats, tx = req.meta
             responses[req.req_id] = GatewayResponse(
@@ -186,3 +197,240 @@ class ServingGateway:
             self._process_batch(rest, responses, telemetry)
         assert all(r is not None for r in responses)
         return responses, telemetry
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant, event-driven serving
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantRequest:
+    """One request of the multi-tenant workload."""
+    tenant: str
+    img: object                  # (H, W, 3) or (1, H, W, 3)
+    t_submit: float = 0.0
+
+
+class MultiTenantGateway(ServingGateway):
+    """Event-driven serving over N tenants sharing one uplink bit budget.
+
+    Replaces :meth:`ServingGateway.serve`'s strict decode -> batch -> restore
+    phases with a virtual-clock event loop where edge submits, uplink drain
+    ticks, channel arrivals, batch-window flushes, and cloud-compute
+    completions interleave:
+
+        submit  : edge forward + content-keyed rate control + encode;
+                  the encoded job queues at the DRR scheduler
+        drain   : the scheduler grants queued jobs against the shared
+                  per-tick budget (weighted DRR, starvation-free); granted
+                  jobs enter their tenant's own channel
+        arrive  : wire decode, then into the micro-batcher — buckets are
+                  keyed (C, bits, H, W) only, so tenants share buckets and
+                  restore compiles stay bounded under heterogeneous traffic
+        flush   : a partially-filled bucket hits its batch window
+        done    : restore + cloud forward finished (the cloud is modeled as
+                  a serial executor on the virtual clock; compute durations
+                  are measured wall time, as in single-tenant serving)
+
+    Per-tenant channels must be unmetered — the *shared* budget lives in the
+    scheduler; a per-channel budget would meter the same bits twice.
+    Channels are reset at the start of every ``serve_tenants`` call, so a
+    repeat of the same workload replays bit-identically.
+    """
+
+    def __init__(self, params, baf_bank: dict, *,
+                 tenants: "list[TenantSpec] | tuple[TenantSpec, ...]",
+                 channel_cfg: ChannelConfig | None = None,
+                 channels: dict[str, SimulatedChannel] | None = None,
+                 controller: RateController | None = None,
+                 default_op: OperatingPoint | None = None,
+                 backend: str = "zlib", max_batch: int = 8,
+                 fused: bool = True,
+                 budget_bits_per_tick: int | None = None,
+                 tick_s: float = 1.0, quantum_bits: int | None = None,
+                 batch_window_s: float | None = 0.02, seed: int = 0):
+        super().__init__(params, baf_bank, channel=None, controller=None,
+                         default_op=default_op, backend=backend,
+                         max_batch=max_batch, fused=fused)
+        specs = list(tenants)
+        if not specs:
+            raise ValueError("need at least one tenant")
+        self.specs = {t.name: t for t in specs}
+        if channels is None:
+            cfg = channel_cfg if channel_cfg is not None else ChannelConfig()
+            if cfg.budget_bits_per_tick is not None:
+                raise ValueError("per-tenant channels must be unmetered; "
+                                 "set budget_bits_per_tick on the gateway "
+                                 "(shared scheduler budget) instead")
+            channels = {t.name: SimulatedChannel(cfg, seed=seed + i)
+                        for i, t in enumerate(specs)}
+        missing = set(self.specs) - set(channels)
+        if missing:
+            raise ValueError(f"no channel for tenants {sorted(missing)}")
+        metered = [n for n, ch in channels.items()
+                   if ch.cfg.budget_bits_per_tick is not None]
+        if metered:
+            raise ValueError(f"per-tenant channels must be unmetered (the "
+                             f"scheduler owns the shared budget; a channel "
+                             f"budget would meter the same bits twice): "
+                             f"{sorted(metered)}")
+        self.channels = channels
+        self.mt_controller = controller
+        self._sched_args = dict(budget_bits_per_tick=budget_bits_per_tick,
+                                tick_s=tick_s, quantum_bits=quantum_bits)
+        self.batch_window_s = batch_window_s
+
+    # -- edge side ----------------------------------------------------------
+    def _pick_tenant_op(self, spec: TenantSpec, z, budget: float):
+        ctrl = self.mt_controller
+        if ctrl is None:
+            return self.default_op
+        if isinstance(ctrl, ContentKeyedController):
+            z_np = np.asarray(z)        # one device->host copy, not one per C
+            stats = {c: activation_stats(z_np, sel)
+                     for c, (_, sel) in self.baf_bank.items()}
+            rd = ctrl.select_for(budget, stats, spec.quality_floor_db)
+        else:
+            rd = ctrl.select(budget)
+        if rd.op.c not in self.baf_bank:
+            raise ValueError(f"RD table picked C={rd.op.c} with no BaF "
+                             f"predictor in the bank {sorted(self.baf_bank)}")
+        return rd.op
+
+    # -- orchestration ------------------------------------------------------
+    def serve_tenants(self, workload: "list[TenantRequest]") -> tuple[
+            dict[str, list[GatewayResponse]], Telemetry]:
+        """Run the event loop over the whole workload; returns per-tenant
+        responses (in per-tenant submission order) and merged telemetry."""
+        for w in workload:
+            if w.tenant not in self.specs:
+                raise KeyError(f"unknown tenant {w.tenant!r}")
+        for ch in self.channels.values():
+            ch.reset()
+        sched = DeficitRoundRobinScheduler(self.specs.values(),
+                                           **self._sched_args)
+        self.last_scheduler = sched          # post-run introspection (tests,
+        telemetry = Telemetry()              # fairness/budget audits)
+        batcher = MicroBatcher(max_batch=self.max_batch,
+                               window_s=self.batch_window_s)
+        responses: dict[str, dict[int, GatewayResponse]] = {
+            n: {} for n in self.specs}
+        counts = {n: 0 for n in self.specs}
+
+        events: list = []
+        seq = itertools.count()
+
+        def push(t: float, kind: str, payload) -> None:
+            heapq.heappush(events, (float(t), next(seq), kind, payload))
+
+        # dedupe only drains that have not run yet: a submit landing at a
+        # timestamp whose drain already executed must get a fresh one, or
+        # its job would strand in the scheduler queue
+        drain_times: set[float] = set()
+
+        def schedule_drain(t: float) -> None:
+            t = float(t)
+            if t not in drain_times:
+                drain_times.add(t)
+                push(t, "drain", None)
+
+        scheduled_flushes: set[int] = set()
+        cloud_busy = 0.0
+
+        def dispatch(batch: MicroBatch, t_ready: float) -> None:
+            nonlocal cloud_busy
+            start = max(t_ready, cloud_busy)
+            logits, compute_s = self._run_batch(batch)
+            cloud_busy = start + compute_s
+            push(cloud_busy, "done", (batch, logits, start, compute_s))
+
+        for w in workload:
+            push(w.t_submit, "submit", w)
+
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+
+            if kind == "submit":
+                w = payload
+                spec = self.specs[w.tenant]
+                local_id = counts[w.tenant]
+                counts[w.tenant] += 1
+                img = np.asarray(w.img)
+                if img.ndim == 3:
+                    img = img[None]
+                z = self._edge_fn(self.params, img)
+                op = self._pick_tenant_op(spec, z, sched.budget_remaining(t))
+                _, sel_idx = self.baf_bank[op.c]
+                enc, stats = encode_activation(z, sel_idx, op.bits,
+                                               backend=self.backend)
+                sched.enqueue(UplinkJob(
+                    tenant=w.tenant, req_id=local_id, bits=stats.total_bits,
+                    t_enqueue=t, payload=(op, enc, stats)))
+                schedule_drain(t)
+
+            elif kind == "drain":
+                drain_times.discard(t)
+                for job in sched.drain(t):
+                    tx = self.channels[job.tenant].transmit(job.bits, t)
+                    push(tx.t_arrive, "arrive", (job, tx))
+                if sched.pending():
+                    schedule_drain(sched.next_tick_time(t))
+
+            elif kind == "arrive":
+                job, tx = payload
+                op, enc, stats = job.payload
+                blob = enc.to_bytes()            # real wire round-trip
+                codes, mins, maxs = decode_stream(
+                    wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
+                req = DecodedRequest(
+                    req_id=job.req_id, codes=np.asarray(codes),
+                    mins=np.asarray(mins), maxs=np.asarray(maxs),
+                    c=op.c, bits=op.bits, t_arrive=t,
+                    meta=(op, stats, tx, job), tenant=job.tenant)
+                fulls = batcher.add(req, now=t)
+                for full in fulls:
+                    dispatch(full, t)
+                if not fulls:
+                    deadline = batcher.deadline(req.key)
+                    if deadline is not None:
+                        due, gen = deadline
+                        if gen not in scheduled_flushes:
+                            scheduled_flushes.add(gen)
+                            push(due, "flush", (req.key, gen))
+
+            elif kind == "flush":
+                key, gen = payload
+                batch = batcher.take(key, gen)
+                if batch is not None:
+                    dispatch(batch, t)
+
+            elif kind == "done":
+                batch, logits, start, compute_s = payload
+                for row, req in enumerate(batch.requests):
+                    op, stats, tx, job = req.meta
+                    responses[req.tenant][req.req_id] = GatewayResponse(
+                        req_id=req.req_id, logits=logits[row], op=op,
+                        stats=stats)
+                    telemetry.record(RequestRecord(
+                        req_id=req.req_id, c=op.c, bits=op.bits,
+                        bits_on_wire=stats.total_bits,
+                        wire_latency_s=tx.t_arrive - tx.t_submit,
+                        queue_wait_s=start - req.t_arrive,
+                        compute_s=compute_s,
+                        batch_size=len(batch.requests),
+                        padded_size=batch.padded_size,
+                        tenant=req.tenant,
+                        sched_wait_s=tx.t_submit - job.t_enqueue))
+
+            # events may drain while buckets still hold requests (no batch
+            # window): sweep the leftovers through the same dispatch path
+            if not events:
+                for rest in batcher.flush():
+                    dispatch(rest, max(r.t_arrive for r in rest.requests))
+
+        out = {}
+        for name, got in responses.items():
+            assert len(got) == counts[name], (
+                f"tenant {name}: {len(got)}/{counts[name]} responses")
+            out[name] = [got[i] for i in range(counts[name])]
+        return out, telemetry

@@ -40,6 +40,11 @@ class RDPoint:
     bits_per_example: float    # measured wire cost: payload + C*32 side info
     psnr_db: float             # restoration quality (higher is better)
     kl: float = math.nan       # KL(cloud || split) of downstream logits
+    # calibration-time content statistics of the selected C channels —
+    # anchor for the per-request PSNR shift (ContentKeyedController); NaN
+    # means "no content keying for this point"
+    calib_peak: float = math.nan
+    calib_range: float = math.nan
 
 
 class RateController:
@@ -80,6 +85,62 @@ class RateController:
         return max(pool, key=lambda p: (p.psnr_db, -p.bits_per_example))
 
 
+class ContentKeyedController(RateController):
+    """Per-request (C, bits) selection keyed on the request's own content.
+
+    The calibration table's PSNRs are averages over the calibration batch;
+    actual requests vary. Quantization noise power scales with the squared
+    quantizer step, the step scales with the content's dynamic range, and
+    the PSNR peak follows the content's peak — so with the per-C activation
+    statistics of *this* request (core.split.activation_stats, O(HWC)) every
+    table entry's PSNR shifts by
+
+        20·log10(peak_req / peak_cal) + 20·log10(range_cal / range_req)
+
+    interpolated from the entry's own calibration anchor. Selection then
+    runs the same 3-tier budget/floor policy as the base class, but against
+    the shifted per-request estimates (Choi & Bajić 2018's per-content
+    operating points, as a table shift instead of an online sweep).
+    """
+
+    def estimate_psnr_db(self, p: RDPoint, stats=None) -> float:
+        """Per-request PSNR estimate for one table entry.
+
+        stats: ActivationStats for p's C (or a dict {c: ActivationStats}).
+        Falls back to the calibration PSNR when anchors or stats are absent.
+        """
+        if isinstance(stats, dict):
+            stats = stats.get(p.op.c)
+        if stats is None or not (math.isfinite(p.calib_peak)
+                                 and math.isfinite(p.calib_range)):
+            return p.psnr_db
+        eps = 1e-12
+        shift = (20.0 * math.log10(max(stats.peak, eps)
+                                   / max(p.calib_peak, eps))
+                 + 20.0 * math.log10(max(p.calib_range, eps)
+                                     / max(stats.dyn_range, eps)))
+        return p.psnr_db + shift
+
+    def select_for(self, bit_budget: float | None = None, stats=None,
+                   floor_db: float | None = None) -> RDPoint:
+        """3-tier policy over per-request PSNR estimates.
+
+        stats    : per-request content statistics ({c: ActivationStats} or a
+                   single ActivationStats applied to every C); None degrades
+                   to the calibration-table policy
+        floor_db : per-tenant floor override (None = controller default)
+        """
+        floor = self.quality_floor_db if floor_db is None else floor_db
+        budget = math.inf if bit_budget is None else bit_budget
+        est = {id(p): self.estimate_psnr_db(p, stats) for p in self.table}
+        fitting = [p for p in self.table if p.bits_per_example <= budget]
+        if not fitting:
+            return self.table[0]
+        meeting = [p for p in fitting if est[id(p)] >= floor]
+        pool = meeting if meeting else fitting
+        return max(pool, key=lambda p: (est[id(p)], -p.bits_per_example))
+
+
 def build_rd_table(params, baf_bank: dict, imgs, *,
                    bits_sweep=(2, 4, 6, 8), backend: str = "zlib",
                    consolidation: bool = True) -> list[RDPoint]:
@@ -90,13 +151,19 @@ def build_rd_table(params, baf_bank: dict, imgs, *,
                (the BaF net's input width is C, so each C needs its own)
     imgs     : (B, H, W, 3) calibration batch the costs/metrics are measured on
     """
-    from repro.core.split import encode_activation, fidelity_metrics
+    from repro.core.split import (activation_stats, encode_activation,
+                                  fidelity_metrics)
     from repro.models.cnn import cnn_edge
 
     edge = jax.jit(lambda p, i: cnn_edge(p, i)[1])
     z = edge(params, imgs)
     table = []
     for c, (baf_params, sel_idx) in sorted(baf_bank.items()):
+        # per-example anchors, averaged: deployment sees single requests
+        per_ex = [activation_stats(z[i:i + 1], sel_idx)
+                  for i in range(imgs.shape[0])]
+        calib_peak = float(np.mean([s.peak for s in per_ex]))
+        calib_range = float(np.mean([s.dyn_range for s in per_ex]))
         for bits in bits_sweep:
             # cost at deployment granularity: the gateway transmits one image
             # per request, and a shared zlib stream over the whole batch would
@@ -111,5 +178,6 @@ def build_rd_table(params, baf_bank: dict, imgs, *,
             table.append(RDPoint(
                 op=OperatingPoint(c=c, bits=bits),
                 bits_per_example=float(np.mean(per_req_bits)),
-                psnr_db=float(psnr), kl=float(kl)))
+                psnr_db=float(psnr), kl=float(kl),
+                calib_peak=calib_peak, calib_range=calib_range))
     return table

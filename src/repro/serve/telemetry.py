@@ -24,10 +24,22 @@ class RequestRecord:
     compute_s: float            # restore + cloud forward (measured, per batch)
     batch_size: int             # true (unpadded) size of the micro-batch
     padded_size: int
+    tenant: str = ""            # owning tenant ("" = single-tenant serving)
+    sched_wait_s: float = 0.0   # encode done -> uplink grant (simulated)
 
     @property
     def total_latency_s(self) -> float:
-        return self.wire_latency_s + self.queue_wait_s + self.compute_s
+        return (self.sched_wait_s + self.wire_latency_s + self.queue_wait_s
+                + self.compute_s)
+
+
+def jain_fairness(values) -> float:
+    """Jain's fairness index over per-tenant allocations: 1 = perfectly
+    fair, 1/n = one tenant holds everything."""
+    v = np.asarray(list(values), np.float64)
+    if v.size == 0 or float(np.sum(v)) == 0.0:
+        return 1.0
+    return float(np.sum(v) ** 2 / (v.size * np.sum(v * v)))
 
 
 class Telemetry:
@@ -42,11 +54,41 @@ class Telemetry:
     def __len__(self) -> int:
         return len(self.records)
 
-    def percentile(self, field_name: str, p: float) -> float:
-        vals = [getattr(r, field_name) for r in self.records]
+    def percentile(self, field_name: str, p: float,
+                   tenant: str | None = None) -> float:
+        vals = [getattr(r, field_name) for r in self.records
+                if tenant is None or r.tenant == tenant]
         if not vals:
             raise ValueError("no records")
         return float(np.percentile(np.asarray(vals, np.float64), p))
+
+    def tenants(self) -> list[str]:
+        return sorted({r.tenant for r in self.records})
+
+    def per_tenant(self) -> dict[str, dict]:
+        """{tenant: summary} over each tenant's own records."""
+        out = {}
+        for t in self.tenants():
+            recs = [r for r in self.records if r.tenant == t]
+            out[t] = {
+                "count": len(recs),
+                "bits_on_wire": int(sum(r.bits_on_wire for r in recs)),
+                "p50_latency_s": float(np.percentile(
+                    [r.total_latency_s for r in recs], 50)),
+                "p99_latency_s": float(np.percentile(
+                    [r.total_latency_s for r in recs], 99)),
+                "mean_sched_wait_s": float(np.mean(
+                    [r.sched_wait_s for r in recs])),
+                "operating_points": sorted({(r.c, r.bits) for r in recs}),
+            }
+        return out
+
+    def fairness(self, field_name: str = "bits_on_wire") -> float:
+        """Jain's index over per-tenant sums of ``field_name`` (1 = fair)."""
+        per = {}
+        for r in self.records:
+            per[r.tenant] = per.get(r.tenant, 0.0) + getattr(r, field_name)
+        return jain_fairness(per.values())
 
     def summary(self, *, wall_s: float | None = None) -> dict:
         """Aggregate view; pass the measured wall time for requests/sec."""
@@ -66,6 +108,10 @@ class Telemetry:
         }
         if wall_s is not None and wall_s > 0:
             out["requests_per_s"] = len(self.records) / wall_s
+        tenants = self.tenants()
+        if len(tenants) > 1 or (tenants and tenants != [""]):
+            out["tenants"] = tenants
+            out["fairness_bits"] = self.fairness("bits_on_wire")
         return out
 
     def format_summary(self, *, wall_s: float | None = None) -> str:
@@ -84,4 +130,12 @@ class Telemetry:
             f"{s['p99_compute_s']*1e3:.2f} ms",
             f"operating points   : {s['operating_points']}",
         ]
+        if "fairness_bits" in s:
+            lines.append(f"fairness (bits)    : {s['fairness_bits']:.3f}")
+            for t, ts in self.per_tenant().items():
+                lines.append(
+                    f"  tenant {t or '<default>':<10}: n={ts['count']:<4} "
+                    f"p50/p99 {ts['p50_latency_s']*1e3:.2f}/"
+                    f"{ts['p99_latency_s']*1e3:.2f} ms  "
+                    f"ops {ts['operating_points']}")
         return "\n".join(lines)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import nn
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.distributed import shard_hidden
 from repro.models.encdec import encdec_loss
@@ -127,7 +128,7 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, *, mesh=None,
             batch_specs = jax.tree.map(lambda _: P("pod"), batch)
             ef_specs = (jax.tree.map(lambda _: P(), state.ef)
                         if state.ef is not None else None)
-            loss, grads, residual = jax.shard_map(
+            loss, grads, residual = shard_map(
                 pod_local, mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: P(), state.params),
                           ef_specs, batch_specs),

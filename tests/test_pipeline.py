@@ -39,10 +39,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.baf import BaFStreamConfig, init_baf_stream
+from repro.compat import set_mesh
 from repro.distributed.pipeline import compressed_pod_transfer, subset_pod_transfer
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32), jnp.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     xs = jax.device_put(x, NamedSharding(mesh, P()))
     y = jax.jit(lambda t: compressed_pod_transfer(t, mesh, bits=8,
                                                   dtype=jnp.float32))(xs)

@@ -1,0 +1,158 @@
+"""Property tests for (content-keyed) rate control.
+
+Invariants pinned here (hypothesis when installed, deterministic
+spot-checks always):
+
+  * floor satisfaction — with an unmetered budget, the selected point meets
+    the PSNR floor whenever ANY table entry does (per-request estimates
+    included);
+  * budget monotonicity — as the bit budget shrinks, the wire cost of the
+    selected point is monotone non-increasing (never spend more under a
+    tighter budget).
+"""
+import math
+
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.split import ActivationStats
+from repro.serve import ContentKeyedController, OperatingPoint, RDPoint
+
+# -- strategies -------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    def _tables():
+        point = st.tuples(
+            st.sampled_from([2, 4, 8, 16]),           # C
+            st.sampled_from([2, 4, 6, 8]),            # bits
+            st.floats(100.0, 1e6),                    # bits_per_example
+            st.floats(5.0, 45.0),                     # psnr_db
+            st.floats(0.5, 8.0),                      # calib_peak
+            st.floats(0.1, 6.0),                      # calib_range
+        ).map(lambda t: RDPoint(
+            op=OperatingPoint(c=t[0], bits=t[1]), bits_per_example=t[2],
+            psnr_db=t[3], calib_peak=t[4], calib_range=t[5]))
+        return st.lists(point, min_size=1, max_size=12)
+
+    def _stats():
+        one = st.tuples(st.floats(0.2, 10.0), st.floats(0.05, 8.0)).map(
+            lambda t: ActivationStats(peak=t[0], dyn_range=t[1]))
+        return st.one_of(st.none(), one,
+                         st.dictionaries(st.sampled_from([2, 4, 8, 16]),
+                                         one, max_size=4))
+else:  # pragma: no cover - the @given decorator skips these tests anyway
+    def _tables():
+        return None
+
+    def _stats():
+        return None
+
+
+# -- properties -------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(table=_tables(), floor=st.floats(0.0, 50.0) if HAVE_HYPOTHESIS else None,
+       stats=_stats())
+def test_selection_meets_floor_whenever_any_entry_does(table, floor, stats):
+    rc = ContentKeyedController(table, quality_floor_db=floor)
+    pick = rc.select_for(None, stats)
+    est = {id(p): rc.estimate_psnr_db(p, stats) for p in rc.table}
+    if any(v >= floor for v in est.values()):
+        assert est[id(pick)] >= floor
+
+
+@settings(max_examples=200, deadline=None)
+@given(table=_tables(),
+       floor=st.floats(0.0, 50.0) if HAVE_HYPOTHESIS else None,
+       stats=_stats(),
+       budgets=(st.lists(st.floats(10.0, 2e6), min_size=2, max_size=8)
+                if HAVE_HYPOTHESIS else None))
+def test_selected_cost_monotone_in_budget(table, floor, stats, budgets):
+    rc = ContentKeyedController(table, quality_floor_db=floor)
+    costs = [rc.select_for(b, stats).bits_per_example
+             for b in sorted(budgets, reverse=True)]
+    # non-increasing throughout: the nothing-fits fallback is the globally
+    # cheapest point, which can never exceed an earlier (feasible) pick
+    assert all(a >= b for a, b in zip(costs, costs[1:]))
+
+
+# -- deterministic spot checks (run even without hypothesis) ----------------
+
+TABLE = [
+    RDPoint(OperatingPoint(c=4, bits=2), 1_000, 12.0,
+            calib_peak=2.0, calib_range=1.0),
+    RDPoint(OperatingPoint(c=8, bits=4), 4_000, 20.0,
+            calib_peak=2.0, calib_range=1.0),
+    RDPoint(OperatingPoint(c=8, bits=8), 8_000, 26.0,
+            calib_peak=2.0, calib_range=1.0),
+]
+
+
+def test_content_shift_direction():
+    """Wilder content (bigger dynamic range) lowers the PSNR estimate;
+    tamer content raises it — peak held at the calibration anchor."""
+    rc = ContentKeyedController(TABLE, quality_floor_db=19.0)
+    p = TABLE[1]
+    wild = ActivationStats(peak=2.0, dyn_range=4.0)
+    tame = ActivationStats(peak=2.0, dyn_range=0.25)
+    assert rc.estimate_psnr_db(p, wild) < p.psnr_db < \
+        rc.estimate_psnr_db(p, tame)
+    # 4x the range = 12 dB down, exactly
+    assert rc.estimate_psnr_db(p, wild) == pytest.approx(20.0 - 12.04, 0.01)
+
+
+def test_content_keying_changes_the_operating_point():
+    """Tame content lets a cheaper point clear the floor -> fewer bits."""
+    rc = ContentKeyedController(TABLE, quality_floor_db=19.0)
+    tame = ActivationStats(peak=2.0, dyn_range=0.4)   # +14 dB shift
+    assert rc.select_for(None, None).op == OperatingPoint(c=8, bits=8)
+    # floor now met by the 4-bit point too; best-quality policy still takes
+    # the highest estimate, but under a 5k budget tame content passes the
+    # floor where calibration stats would have degraded below it
+    budget_pick_tame = rc.select_for(5_000, tame)
+    est = rc.estimate_psnr_db(budget_pick_tame, tame)
+    assert est >= 19.0
+    assert budget_pick_tame.op == OperatingPoint(c=8, bits=4)
+
+
+def test_missing_anchors_fall_back_to_table_psnr():
+    rc = ContentKeyedController(
+        [RDPoint(OperatingPoint(c=4, bits=2), 1_000, 12.0)],
+        quality_floor_db=5.0)
+    stats = ActivationStats(peak=9.0, dyn_range=9.0)
+    assert rc.estimate_psnr_db(rc.table[0], stats) == 12.0
+
+
+def test_invariants_hold_on_seeded_random_tables(rng):
+    """The two properties above, exercised without hypothesis: 200 seeded
+    random tables/budgets/stats through the same assertions."""
+    for _ in range(200):
+        n = int(rng.integers(1, 12))
+        table = [RDPoint(
+            op=OperatingPoint(c=int(rng.choice([2, 4, 8, 16])),
+                              bits=int(rng.choice([2, 4, 6, 8]))),
+            bits_per_example=float(rng.uniform(100, 1e6)),
+            psnr_db=float(rng.uniform(5, 45)),
+            calib_peak=float(rng.uniform(0.5, 8)),
+            calib_range=float(rng.uniform(0.1, 6)))
+            for _ in range(n)]
+        floor = float(rng.uniform(0, 50))
+        stats = (None if rng.random() < 0.3 else ActivationStats(
+            peak=float(rng.uniform(0.2, 10)),
+            dyn_range=float(rng.uniform(0.05, 8))))
+        rc = ContentKeyedController(table, quality_floor_db=floor)
+        est = {id(p): rc.estimate_psnr_db(p, stats) for p in rc.table}
+        pick = rc.select_for(None, stats)
+        if any(v >= floor for v in est.values()):
+            assert est[id(pick)] >= floor
+        budgets = sorted(rng.uniform(10, 2e6, size=6), reverse=True)
+        costs = [rc.select_for(float(b), stats).bits_per_example
+                 for b in budgets]
+        assert all(a >= b for a, b in zip(costs, costs[1:]))
+
+
+def test_select_for_respects_per_tenant_floor_override():
+    rc = ContentKeyedController(TABLE, quality_floor_db=99.0)
+    # controller floor is unreachable, per-tenant override is not
+    pick = rc.select_for(5_000, None, 19.0)
+    assert pick.op == OperatingPoint(c=8, bits=4)
