@@ -18,6 +18,14 @@ fairness over per-tenant wire bits, and each tenant's p99 vs its solo p99.
 Acceptance gates (ISSUE 2): 16-tenant aggregate restore throughput within
 20% of the single-tenant batched path; no tenant p99 above 3x its solo p99.
 
+Part 3 (entropy-coded serving, ISSUE 3) runs the multi-tenant gateway end
+to end with ``backend="rans"``: the rate controller selects operating
+points from an RD table built from *actual encoded container bytes*
+(cached on disk under benchmarks/, keyed by backend+seed, so CI reruns
+skip the sweep), and the scheduler/channel meter every request at its true
+container length. Reports per-backend mean wire bits and throughput, and
+checks that scheduler grants exactly equal the containers' byte lengths.
+
 Weights are untrained — throughput and compile behaviour do not depend on
 training. Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py
 and writes benchmarks/serve_gateway_results.json.
@@ -39,8 +47,9 @@ from repro.core.baf import BaFConvConfig, init_baf_conv
 from repro.data.synthetic import shapes_batch_iterator
 from repro.models.cnn import init_cnn
 from repro.serve import (ChannelConfig, MultiTenantGateway, OperatingPoint,
-                         ServingGateway, SimulatedChannel, TenantRequest,
-                         TenantSpec)
+                         RateController, ServingGateway, SimulatedChannel,
+                         TenantRequest, TenantSpec, build_rd_table,
+                         load_or_build_rd_table)
 
 _ROWS: list[str] = []
 
@@ -164,6 +173,72 @@ def bench_tenants(params, bank, imgs, *, n_tenants: int, c: int,
     }
 
 
+def bench_codec_backend(params, bank, imgs, *, backend: str, seed: int = 0,
+                        n_requests: int = 12):
+    """Part 3: multi-tenant serving with real entropy-coded accounting.
+
+    The RD table is built at this backend's true container costs (and disk-
+    cached keyed by backend+seed); channel + scheduler meter each request's
+    actual serialized length.
+    """
+    from repro.codec.container import VERSION as rans_version
+    from repro.core.codec import MAGIC as wire_magic
+
+    cs = sorted(bank)
+    bits_sweep = (4, 8)
+    calib = imgs[:4]                 # key must match the slice actually used
+    cache = os.path.join(os.path.dirname(__file__),
+                         f"rd_cache_{backend.replace('-', '_')}_seed{seed}.json")
+    key = {"backend": backend, "seed": seed, "cs": cs,
+           "bits_sweep": list(bits_sweep), "calib": int(calib.shape[0]),
+           "input": int(calib.shape[1]),
+           # coder changes that move container sizes must invalidate the
+           # cache — bump the container VERSION / wire MAGIC when they do
+           "codec_rev": f"{wire_magic.decode()}/rtc{rans_version}"}
+    table = load_or_build_rd_table(
+        cache, key,
+        lambda: build_rd_table(params, bank, calib, backend=backend,
+                               bits_sweep=bits_sweep))
+    floor_db = float(np.median([p.psnr_db for p in table]))
+    gw = MultiTenantGateway(
+        params, bank,
+        tenants=[TenantSpec("a"), TenantSpec("b", weight=2.0)],
+        channel_cfg=ChannelConfig(bandwidth_bps=5e6, base_latency_s=0.005),
+        controller=RateController(table, quality_floor_db=floor_db),
+        backend=backend, max_batch=4,
+        budget_bits_per_tick=400_000, tick_s=0.01, batch_window_s=0.005)
+    work = [TenantRequest(tenant="ab"[i % 2], img=imgs[i % imgs.shape[0]],
+                          t_submit=0.002 * i) for i in range(n_requests)]
+    # warm every padded bucket size the measured run can hit (bursts spaced
+    # far beyond the batch window flush at exactly their own size)
+    warm, t = [], 0.0
+    for burst in (1, 2, 4):
+        warm += [TenantRequest("a", imgs[i % imgs.shape[0]], t)
+                 for i in range(burst)]
+        t += 1.0
+    gw.serve_tenants(warm)
+    t0 = time.perf_counter()
+    _, tel = gw.serve_tenants(work)
+    wall = time.perf_counter() - t0
+    sched = gw.last_scheduler
+    granted = {n: tq.granted_bits for n, tq in sched.tenants.items()}
+    wire = {t: sum(r.bits_on_wire for r in tel.records if r.tenant == t)
+            for t in granted}
+    assert granted == wire, (
+        f"scheduler grants {granted} != real container bits {wire}")
+    s = tel.summary(wall_s=wall)
+    return {
+        "backend": backend,
+        "requests": n_requests,
+        "wall_s": wall,
+        "rps_end_to_end": n_requests / wall,
+        "mean_wire_bits": s["mean_bits_on_wire"],
+        "p99_latency_ms": s["p99_latency_s"] * 1e3,
+        "operating_points": [list(op) for op in s["operating_points"]],
+        "accounting_exact": True,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=None)
@@ -207,6 +282,23 @@ def main():
              f"worst_p99={r['worst_p99_ms']:.2f}ms "
              f"(solo {r['solo_p99_ms']:.2f}ms, "
              f"x{r['p99_vs_solo']:.2f}) mean_batch={r['mean_batch']:.2f}")
+
+    # -- part 3: entropy-coded serving (true container-byte accounting) -----
+    bank_multi = dict(bank)
+    if 4 not in bank_multi:      # a second C so the RD table has real choice
+        baf4 = init_baf_conv(jax.random.PRNGKey(2),
+                             BaFConvConfig(c=4, q=smoke_config().split_q,
+                                           hidden=8))
+        bank_multi[4] = (baf4, np.arange(4))
+    for backend in ("zlib", "rans"):
+        r = bench_codec_backend(params, bank_multi, imgs, backend=backend,
+                                n_requests=8 if args.smoke else 24)
+        results[f"codec_{backend}"] = r
+        _row(f"gateway_codec_{backend}", 1e6 * r["wall_s"] / r["requests"],
+             f"rps={r['rps_end_to_end']:.1f} "
+             f"mean_wire_bits={r['mean_wire_bits']:.0f} "
+             f"p99={r['p99_latency_ms']:.2f}ms ops={r['operating_points']} "
+             f"accounting=exact")
 
     t1, t16 = results["tenants_1"], results["tenants_16"]
     tp_ratio = t16["rps_cloud_compute"] / t1["rps_cloud_compute"]

@@ -1,32 +1,54 @@
 """Lossless wire codec for quantized/tiled tensors — host-side by design.
 
-The paper compresses the tiled image with FLIF (or the lossless tool of [5], or
-HEVC). None of those binaries are available here, and entropy coding is branchy
-integer code with no TPU analogue (DESIGN.md §4), so the wire format uses:
+The paper compresses the tiled image with FLIF (or the lossless tool of [5],
+or HEVC). This repo now ships a real entropy coder of its own: the
+context-adaptive interleaved rANS subsystem in ``repro.codec``, surfaced
+here behind a backend registry so every caller keeps the same
+``encode``/``decode`` API:
 
-  * ``zlib``  — DEFLATE over n-bit-packed codes (default; conservative stand-in
-                for FLIF: FLIF is strictly better, so reported reductions are a
-                lower bound on the paper's),
-  * ``png``   — PIL PNG for 8-bit tiled images (the codec of prior work [3]),
-  * ``raw``   — n-bit packing only (no entropy coding),
-  * plus an empirical-entropy estimate as a codec-independent floor.
+  * ``rans``     — interleaved multi-stream rANS with static per-channel
+                   frequency tables (on-device Pallas histogram -> host
+                   coding pass); per-tile chunks, partial decode.
+  * ``rans-ctx`` — the same coder with an adaptive quantized-up-neighbor /
+                   channel context model; nothing transmitted but lane
+                   states, typically at or below the order-0 entropy floor
+                   on BaF residual tiles.
+  * ``zlib``     — DEFLATE over n-bit-packed codes (legacy default).
+  * ``png``      — PIL PNG for 8-bit tiled images (the codec of prior
+                   work [3]).
+  * ``raw``      — n-bit packing only (no entropy coding).
 
-Bit accounting follows the paper: payload bits + C*32 bits of fp16 min/max side
-info are all counted.
+plus :func:`empirical_entropy_bits` as a codec-independent order-0 floor.
+
+The rANS backends code the channel-last code tensor directly (their
+container is documented in ``repro/codec/container.py``); the image-style
+backends expect the pre-tiled 2D stream — ``backend_wants_tiling`` tells
+``core/split.py`` which detour to take.
+
+Wire format (``EncodedTensor.to_bytes``): ``BaF2`` magic, backend id, bit
+depth, shape, explicit side-info and payload lengths. ``from_bytes``
+validates structurally — bad magic, unknown backend, every truncation, and
+trailing garbage each raise a distinct ``ValueError`` — so corrupt blobs
+fail at the header, not deep inside ``unpack_bits``.
+
+Bit accounting follows the paper: ``total_bits`` counts payload + C*32 bits
+of fp16 min/max side info; ``wire_bits`` additionally counts the container
+header — the number the serving channel/scheduler actually meter.
 """
 from __future__ import annotations
 
 import io
-import math
 import struct
 import zlib
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
 from repro.core.quant import QuantParams
 
-MAGIC = b"BaF1"
+MAGIC = b"BaF2"
+_OLD_MAGICS = (b"BaF1",)
 
 
 # ---------------------------------------------------------------------------
@@ -76,42 +98,207 @@ def unpack_bits(data: bytes, bits: int, count: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class _Backend:
+    name: str
+    wire_id: int
+    tiled: bool        # expects the pre-tiled 2D image (core/split.py)
+    encode: Callable   # (codes, bits, level) -> payload bytes
+    decode: Callable   # (payload, shape, bits, count) -> flat/shaped codes
+
+
+_REGISTRY: dict[str, _Backend] = {}
+_BY_ID: dict[int, str] = {}
+# name -> registrar called on first use, so importing core.codec never pulls
+# in the rANS subsystem (and its Pallas kernels); populated at module bottom
+_LAZY: dict[str, Callable[[], None]] = {}
+
+
+def register_backend(name: str, wire_id: int, *, tiled: bool,
+                     encode: Callable, decode: Callable) -> None:
+    if name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered")
+    if wire_id in _BY_ID:
+        raise ValueError(f"wire id {wire_id} already taken by "
+                         f"{_BY_ID[wire_id]!r}")
+    _REGISTRY[name] = _Backend(name=name, wire_id=wire_id, tiled=tiled,
+                               encode=encode, decode=decode)
+    _BY_ID[wire_id] = name
+
+
+def _get_backend(name: str) -> _Backend:
+    if name not in _REGISTRY and name in _LAZY:
+        _LAZY[name]()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{sorted(set(_REGISTRY) | set(_LAZY))}") from None
+
+
+def backend_wants_tiling(name: str) -> bool:
+    """Does this backend expect the channels tiled into a 2D image?"""
+    return _get_backend(name).tiled
+
+
+def backend_names() -> list[str]:
+    return sorted(set(_REGISTRY) | set(_LAZY))
+
+
+# -- built-in backends ------------------------------------------------------
+
+def _zlib_encode(codes, bits, level):
+    return zlib.compress(pack_bits(codes, bits), level)
+
+
+def _zlib_decode(payload, shape, bits, count):
+    return unpack_bits(zlib.decompress(payload), bits, count)
+
+
+def _raw_encode(codes, bits, level):
+    return pack_bits(codes, bits)
+
+
+def _raw_decode(payload, shape, bits, count):
+    return unpack_bits(payload, bits, count)
+
+
+def _png_encode(codes, bits, level):
+    from PIL import Image
+    if bits > 8:
+        raise ValueError("png backend supports <=8 bits")
+    if codes.size and codes.min() < 0:
+        raise ValueError("png backend: negative codes are invalid")
+    if codes.size and codes.max() > 255:
+        raise ValueError(
+            f"png backend: codes up to {int(codes.max())} do not fit in "
+            "8 bits")
+    img = codes.astype(np.uint8)
+    if img.ndim != 2:
+        raise ValueError("png backend expects a 2D tiled image")
+    buf = io.BytesIO()
+    Image.fromarray(img, mode="L").save(buf, format="PNG", optimize=True)
+    return buf.getvalue()
+
+
+def _png_decode(payload, shape, bits, count):
+    from PIL import Image
+    img = np.asarray(Image.open(io.BytesIO(payload)))
+    return img.ravel()[:count]
+
+
+register_backend("zlib", 0, tiled=True, encode=_zlib_encode,
+                 decode=_zlib_decode)
+register_backend("png", 1, tiled=True, encode=_png_encode,
+                 decode=_png_decode)
+register_backend("raw", 2, tiled=True, encode=_raw_encode,
+                 decode=_raw_decode)
+
+
+def _register_rans_backends() -> None:
+    if "rans" in _REGISTRY:
+        return
+    from repro.codec import (decode_tensor, encode_adaptive_tensor,
+                             encode_static_tensor)
+    register_backend(
+        "rans", 3, tiled=False,
+        encode=lambda codes, bits, level: encode_static_tensor(codes, bits),
+        decode=lambda payload, shape, bits, count:
+            decode_tensor(payload, shape, bits))
+    register_backend(
+        "rans-ctx", 4, tiled=False,
+        encode=lambda codes, bits, level:
+            encode_adaptive_tensor(codes, bits),
+        decode=lambda payload, shape, bits, count:
+            decode_tensor(payload, shape, bits))
+
+
+_LAZY["rans"] = _register_rans_backends
+_LAZY["rans-ctx"] = _register_rans_backends
+
+
+# ---------------------------------------------------------------------------
 # Wire format
 # ---------------------------------------------------------------------------
 
 @dataclass
 class EncodedTensor:
     payload: bytes          # entropy-coded channel codes
-    backend: str            # 'zlib' | 'png' | 'raw'
+    backend: str            # registry name ('zlib'|'png'|'raw'|'rans'|...)
     bits: int
     shape: tuple            # original codes shape, channel-last
     side_info: bytes        # fp16 mins/maxs
 
     def total_bits(self) -> int:
-        """Paper-style accounting: payload + C*32 side-info bits (+ header)."""
+        """Paper-style accounting: payload + C*32 side-info bits."""
         return 8 * (len(self.payload) + len(self.side_info))
 
+    def header_bytes(self) -> int:
+        return 7 + 4 * len(self.shape) + 8
+
+    def wire_bits(self) -> int:
+        """Everything that crosses the channel: header + side info + payload.
+
+        This is what the serving channel meters and the scheduler budgets;
+        ``total_bits`` stays the paper's (header-free) reporting quantity.
+        """
+        return 8 * (self.header_bytes() + len(self.side_info)
+                    + len(self.payload))
+
     def to_bytes(self) -> bytes:
-        hdr = struct.pack(
-            "<4sB B B", MAGIC, {"zlib": 0, "png": 1, "raw": 2}[self.backend],
-            self.bits, len(self.shape))
+        hdr = struct.pack("<4sB B B", MAGIC,
+                          _get_backend(self.backend).wire_id,
+                          self.bits, len(self.shape))
         hdr += struct.pack(f"<{len(self.shape)}I", *self.shape)
-        hdr += struct.pack("<I", len(self.side_info))
+        hdr += struct.pack("<II", len(self.side_info), len(self.payload))
         return hdr + self.side_info + self.payload
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "EncodedTensor":
+        if len(data) < 7:
+            raise ValueError(
+                f"truncated wire header: {len(data)} bytes, need >= 7")
         magic, backend_id, bits, ndim = struct.unpack_from("<4sB B B", data, 0)
-        assert magic == MAGIC, "bad magic"
+        if magic in _OLD_MAGICS:
+            raise ValueError(
+                f"unsupported wire-format version {magic.decode('ascii', 'replace')} "
+                f"(this build writes {MAGIC.decode('ascii')}; re-encode)")
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic!r}")
+        if backend_id not in _BY_ID:
+            # rans ids are lazily registered; resolve them before failing
+            for lazy in _LAZY:
+                _get_backend(lazy)
+            if backend_id not in _BY_ID:
+                raise ValueError(f"unknown backend id {backend_id}")
         off = 7
+        if off + 4 * ndim + 8 > len(data):
+            raise ValueError(
+                f"truncated wire header: {ndim}-d shape + lengths need "
+                f"{off + 4 * ndim + 8} bytes, have {len(data)}")
         shape = struct.unpack_from(f"<{ndim}I", data, off)
         off += 4 * ndim
-        (silen,) = struct.unpack_from("<I", data, off)
-        off += 4
+        silen, plen = struct.unpack_from("<II", data, off)
+        off += 8
+        if off + silen > len(data):
+            raise ValueError(
+                f"truncated side info: header claims {silen} bytes, "
+                f"{len(data) - off} remain")
         side_info = data[off:off + silen]
-        payload = data[off + silen:]
-        backend = {0: "zlib", 1: "png", 2: "raw"}[backend_id]
-        return cls(payload=payload, backend=backend, bits=bits,
+        off += silen
+        if off + plen > len(data):
+            raise ValueError(
+                f"truncated payload: header claims {plen} bytes, "
+                f"{len(data) - off} remain")
+        payload = data[off:off + plen]
+        off += plen
+        if off != len(data):
+            raise ValueError(
+                f"{len(data) - off} bytes of trailing garbage after payload")
+        return cls(payload=payload, backend=_BY_ID[backend_id], bits=bits,
                    shape=tuple(shape), side_info=side_info)
 
 
@@ -132,45 +319,17 @@ def encode(codes: np.ndarray, qp: QuantParams, backend: str = "zlib",
            level: int = 9) -> EncodedTensor:
     """Entropy-code quantized channel codes (any shape, channel-last)."""
     codes = np.asarray(codes)
-    if backend == "zlib":
-        payload = zlib.compress(pack_bits(codes, qp.bits), level)
-    elif backend == "raw":
-        payload = pack_bits(codes, qp.bits)
-    elif backend == "png":
-        from PIL import Image
-        if qp.bits > 8:
-            raise ValueError("png backend supports <=8 bits")
-        if codes.size and codes.min() < 0:
-            raise ValueError("png backend: negative codes are invalid")
-        if codes.size and codes.max() > 255:
-            raise ValueError(
-                f"png backend: codes up to {int(codes.max())} do not fit in "
-                "8 bits")
-        img = codes.astype(np.uint8)
-        if img.ndim != 2:
-            raise ValueError("png backend expects a 2D tiled image")
-        buf = io.BytesIO()
-        Image.fromarray(img, mode="L").save(buf, format="PNG", optimize=True)
-        payload = buf.getvalue()
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    be = _get_backend(backend)
+    payload = be.encode(codes, qp.bits, level)
     return EncodedTensor(payload=payload, backend=backend, bits=qp.bits,
                          shape=tuple(codes.shape), side_info=_pack_side_info(qp))
 
 
 def decode(enc: EncodedTensor) -> tuple[np.ndarray, QuantParams]:
     qp = _unpack_side_info(enc.side_info, enc.bits)
-    count = int(np.prod(enc.shape))
-    if enc.backend == "zlib":
-        codes = unpack_bits(zlib.decompress(enc.payload), enc.bits, count)
-    elif enc.backend == "raw":
-        codes = unpack_bits(enc.payload, enc.bits, count)
-    elif enc.backend == "png":
-        from PIL import Image
-        img = np.asarray(Image.open(io.BytesIO(enc.payload)))
-        codes = img.ravel()[:count]
-    else:
-        raise ValueError(enc.backend)
+    count = int(np.prod(enc.shape)) if enc.shape else 1
+    be = _get_backend(enc.backend)
+    codes = np.asarray(be.decode(enc.payload, enc.shape, enc.bits, count))
     dtype = np.uint8 if enc.bits <= 8 else (np.uint16 if enc.bits <= 16 else np.uint32)
     return codes.astype(dtype).reshape(enc.shape), qp
 
@@ -178,10 +337,12 @@ def decode(enc: EncodedTensor) -> tuple[np.ndarray, QuantParams]:
 def empirical_entropy_bits(codes: np.ndarray, bits: int) -> float:
     """Order-0 empirical entropy of the code stream, in total bits.
 
-    Codec-independent floor used in benchmarks to separate "what the quantizer
-    achieved" from "what DEFLATE managed to realize".
+    Codec-independent floor used in benchmarks to separate "what the
+    quantizer achieved" from "what the entropy coder realized".
     """
     flat = np.asarray(codes).ravel()
+    if flat.size == 0:
+        return 0.0
     counts = np.bincount(flat.astype(np.int64), minlength=1 << bits)
     p = counts[counts > 0] / flat.size
     return float(-np.sum(p * np.log2(p)) * flat.size)

@@ -59,6 +59,8 @@ class SplitStats:
     side_info_bits: int
     raw_bits: int            # uncompressed fp32 full-tensor bits (reference)
     entropy_bits: float      # order-0 entropy floor of the code stream
+    wire_bits: int = 0       # actual container bytes * 8 (header included) —
+                             # what the channel/scheduler meter
 
     @property
     def reduction_vs_raw(self) -> float:
@@ -82,9 +84,15 @@ def encode_activation(z, sel_idx, bits: int, *,
     # channel per image; counted at 32 bits/channel in total_bits)
     qp = compute_quant_params(z_sel, bits, per_example=True)
     codes = np.asarray(quantize(z_sel, qp))
-    tiled = np.asarray(tile_batch(jnp.asarray(codes)))   # (B, rH, cW)
-    # one tiled image per batch element, concatenated vertically on the wire
-    stream = tiled.reshape(-1, tiled.shape[-1])
+    if wire.backend_wants_tiling(backend):
+        # image-style codecs (png, and the zlib/raw stand-ins) get the
+        # paper's tiled 2D image, one per batch element, stacked vertically
+        tiled = np.asarray(tile_batch(jnp.asarray(codes)))   # (B, rH, cW)
+        stream = tiled.reshape(-1, tiled.shape[-1])
+    else:
+        # rANS codes the channel-last tensor directly: its container keeps
+        # channels as separate tile chunks, no 2D detour needed
+        stream = codes
     enc = wire.encode(stream, qp, backend=backend)
     stats = SplitStats(
         total_bits=enc.total_bits(),
@@ -92,6 +100,7 @@ def encode_activation(z, sel_idx, bits: int, *,
         side_info_bits=8 * len(enc.side_info),
         raw_bits=int(np.prod(z.shape)) * 32,
         entropy_bits=wire.empirical_entropy_bits(codes, bits),
+        wire_bits=enc.wire_bits(),
     )
     return enc, stats
 
@@ -99,8 +108,12 @@ def encode_activation(z, sel_idx, bits: int, *,
 def decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
     """Wire blob -> (codes (B, H, W, C), mins (B, 1, 1, C), maxs (B, 1, 1, C))."""
     stream, qp = wire.decode(enc)
-    tiled = stream.reshape(batch, -1, stream.shape[-1])
-    codes = untile_batch(jnp.asarray(tiled), c)
+    if wire.backend_wants_tiling(enc.backend):
+        tiled = stream.reshape(batch, -1, stream.shape[-1])
+        codes = untile_batch(jnp.asarray(tiled), c)
+    else:
+        codes = jnp.asarray(stream.reshape(batch, -1, stream.shape[-2],
+                                           stream.shape[-1]))
     mins = jnp.asarray(qp.mins).reshape(batch, 1, 1, c)
     maxs = jnp.asarray(qp.maxs).reshape(batch, 1, 1, c)
     return codes, mins, maxs

@@ -10,8 +10,11 @@ from repro.serve.batcher import (BucketKey, DecodedRequest, MicroBatch,
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
 from repro.serve.gateway import (GatewayResponse, MultiTenantGateway,
                                  ServingGateway, TenantRequest)
-from repro.serve.rate_control import (ContentKeyedController, OperatingPoint,
-                                      RateController, RDPoint, build_rd_table)
+from repro.serve.rate_control import (ContentKeyedController,
+                                      OperatingPoint, RateController,
+                                      RDPoint, build_rd_table,
+                                      load_or_build_rd_table,
+                                      rd_table_from_json, rd_table_to_json)
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
 from repro.serve.telemetry import (RequestRecord, Telemetry, jain_fairness)
@@ -22,6 +25,7 @@ __all__ = [
     "GatewayResponse", "MultiTenantGateway", "ServingGateway",
     "TenantRequest", "ContentKeyedController", "OperatingPoint",
     "RateController", "RDPoint", "build_rd_table",
+    "load_or_build_rd_table", "rd_table_from_json", "rd_table_to_json",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
     "RequestRecord", "Telemetry", "jain_fairness",
 ]

@@ -130,6 +130,15 @@ class SimulatedChannel:
         return Transmission(bits=bits, t_submit=t_submit, t_start=t_start,
                             t_arrive=t_arrive)
 
+    def transmit_bytes(self, data: bytes,
+                       t_submit: float | None = None) -> Transmission:
+        """Packetize an encoded wire blob: meters the *actual* container
+        length (header + side info + entropy-coded payload), so channel
+        occupancy reflects real bytes on the wire, not an estimate."""
+        if len(data) == 0:
+            raise ValueError("cannot transmit an empty packet")
+        return self.transmit(8 * len(data), t_submit)
+
     def advance(self, dt: float) -> None:
         """Move the virtual clock forward (new tick budgets become current)."""
         if dt < 0:

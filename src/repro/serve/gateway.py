@@ -106,19 +106,22 @@ class ServingGateway:
     def encode_request(self, img, t_submit: float = 0.0):
         """Edge-side work for one request: rate control + encode + transmit.
 
-        img: (1, H, W, 3). Returns (op, EncodedTensor, SplitStats, Transmission).
+        img: (1, H, W, 3). Returns (op, wire blob, SplitStats, Transmission).
+        The blob is serialized here — the channel meters its true byte
+        length (container header + side info + entropy-coded payload).
         """
         op = self._pick_op(t_submit)
         _, sel_idx = self.baf_bank[op.c]
         z = self._edge_fn(self.params, img)
         enc, stats = encode_activation(z, sel_idx, op.bits,
                                        backend=self.backend)
+        blob = enc.to_bytes()
         if self.channel is not None:
-            tx = self.channel.transmit(stats.total_bits, t_submit)
+            tx = self.channel.transmit_bytes(blob, t_submit)
         else:
-            tx = Transmission(bits=stats.total_bits, t_submit=t_submit,
+            tx = Transmission(bits=8 * len(blob), t_submit=t_submit,
                               t_start=t_submit, t_arrive=t_submit)
-        return op, enc, stats, tx
+        return op, blob, stats, tx
 
     # -- cloud side ---------------------------------------------------------
     def _restore(self, key, codes, mins, maxs):
@@ -151,7 +154,7 @@ class ServingGateway:
                 req_id=req.req_id, logits=logits[row], op=op, stats=stats)
             telemetry.record(RequestRecord(
                 req_id=req.req_id, c=op.c, bits=op.bits,
-                bits_on_wire=stats.total_bits,
+                bits_on_wire=stats.wire_bits,
                 wire_latency_s=tx.latency_s,
                 queue_wait_s=t_dispatch - req.t_arrive,
                 compute_s=compute_s,
@@ -175,16 +178,15 @@ class ServingGateway:
         # charge early requests for wire time the late ones occupied)
         inflight = []
         for i in sorted(range(n), key=lambda k: float(submit_times[k])):
-            op, enc, stats, tx = self.encode_request(imgs[i:i + 1],
-                                                     float(submit_times[i]))
-            inflight.append((i, op, enc, stats, tx))
+            op, blob, stats, tx = self.encode_request(imgs[i:i + 1],
+                                                      float(submit_times[i]))
+            inflight.append((i, op, blob, stats, tx))
         # 2. cloud side: decode in arrival order, micro-batch, restore, respond
         inflight.sort(key=lambda item: (item[4].t_arrive, item[0]))
         responses: list[GatewayResponse | None] = [None] * n
         telemetry = Telemetry()
         batcher = MicroBatcher(max_batch=self.max_batch)
-        for i, op, enc, stats, tx in inflight:
-            blob = enc.to_bytes()                        # real wire round-trip
+        for i, op, blob, stats, tx in inflight:
             codes, mins, maxs = decode_stream(
                 wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
             req = DecodedRequest(
@@ -363,23 +365,26 @@ class MultiTenantGateway(ServingGateway):
                 _, sel_idx = self.baf_bank[op.c]
                 enc, stats = encode_activation(z, sel_idx, op.bits,
                                                backend=self.backend)
+                blob = enc.to_bytes()
+                # the scheduler meters the job at its true container length,
+                # so DRR shares reflect real bits on the wire
                 sched.enqueue(UplinkJob(
-                    tenant=w.tenant, req_id=local_id, bits=stats.total_bits,
-                    t_enqueue=t, payload=(op, enc, stats)))
+                    tenant=w.tenant, req_id=local_id, bits=8 * len(blob),
+                    t_enqueue=t, payload=(op, blob, stats)))
                 schedule_drain(t)
 
             elif kind == "drain":
                 drain_times.discard(t)
                 for job in sched.drain(t):
-                    tx = self.channels[job.tenant].transmit(job.bits, t)
+                    blob = job.payload[1]
+                    tx = self.channels[job.tenant].transmit_bytes(blob, t)
                     push(tx.t_arrive, "arrive", (job, tx))
                 if sched.pending():
                     schedule_drain(sched.next_tick_time(t))
 
             elif kind == "arrive":
                 job, tx = payload
-                op, enc, stats = job.payload
-                blob = enc.to_bytes()            # real wire round-trip
+                op, blob, stats = job.payload    # real wire round-trip
                 codes, mins, maxs = decode_stream(
                     wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
                 req = DecodedRequest(
@@ -413,7 +418,7 @@ class MultiTenantGateway(ServingGateway):
                         stats=stats)
                     telemetry.record(RequestRecord(
                         req_id=req.req_id, c=op.c, bits=op.bits,
-                        bits_on_wire=stats.total_bits,
+                        bits_on_wire=stats.wire_bits,
                         wire_latency_s=tx.t_arrive - tx.t_submit,
                         queue_wait_s=start - req.t_arrive,
                         compute_s=compute_s,

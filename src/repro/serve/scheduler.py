@@ -52,7 +52,8 @@ class UplinkJob:
     """One encoded request waiting for an uplink grant."""
     tenant: str
     req_id: int              # per-tenant sequence number
-    bits: int                # wire cost (payload + side info), fixed at encode
+    bits: int                # true wire cost: 8 * len(serialized container)
+                             # (header + side info + entropy-coded payload)
     t_enqueue: float         # virtual time the edge finished encoding
     payload: Any = None      # opaque (op, enc, stats, ...) carried through
 

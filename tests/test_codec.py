@@ -141,3 +141,69 @@ def test_png_roundtrip_still_works(rng):
     enc = wire.encode(codes, qp, backend="png")
     dec, _ = wire.decode(wire.EncodedTensor.from_bytes(enc.to_bytes()))
     assert np.array_equal(dec.reshape(8, 8), codes)
+
+
+# ---------------------------------------------------------------------------
+# from_bytes structural hardening (entropy-coding PR satellite): every
+# malformation fails loudly at the header with its own message, instead of
+# surfacing later as a short stream inside unpack_bits
+# ---------------------------------------------------------------------------
+
+def _blob(rng, backend="raw"):
+    codes = rng.integers(0, 64, size=(4, 6)).astype(np.uint8)
+    return wire.encode(codes, _qp(6, 6, rng), backend=backend).to_bytes()
+
+
+def test_from_bytes_rejects_bad_magic(rng):
+    blob = _blob(rng)
+    with pytest.raises(ValueError, match="bad magic"):
+        wire.EncodedTensor.from_bytes(b"NOPE" + blob[4:])
+
+
+def test_from_bytes_rejects_old_wire_version(rng):
+    blob = _blob(rng)
+    with pytest.raises(ValueError, match="unsupported wire-format version"):
+        wire.EncodedTensor.from_bytes(b"BaF1" + blob[4:])
+
+
+def test_from_bytes_rejects_truncated_header(rng):
+    blob = _blob(rng)
+    with pytest.raises(ValueError, match="truncated wire header"):
+        wire.EncodedTensor.from_bytes(blob[:5])
+    with pytest.raises(ValueError, match="truncated wire header"):
+        wire.EncodedTensor.from_bytes(blob[:9])       # mid-shape
+
+
+def test_from_bytes_rejects_truncated_side_info(rng):
+    blob = _blob(rng)
+    hdr = 7 + 4 * 2 + 8
+    with pytest.raises(ValueError, match="truncated side info"):
+        wire.EncodedTensor.from_bytes(blob[:hdr + 3])
+
+
+def test_from_bytes_rejects_truncated_payload(rng):
+    blob = _blob(rng)
+    with pytest.raises(ValueError, match="truncated payload"):
+        wire.EncodedTensor.from_bytes(blob[:-1])
+
+
+def test_from_bytes_rejects_trailing_garbage(rng):
+    blob = _blob(rng)
+    with pytest.raises(ValueError, match="trailing garbage"):
+        wire.EncodedTensor.from_bytes(blob + b"\x00")
+
+
+def test_from_bytes_rejects_unknown_backend_id(rng):
+    blob = bytearray(_blob(rng))
+    blob[4] = 250
+    with pytest.raises(ValueError, match="unknown backend id"):
+        wire.EncodedTensor.from_bytes(bytes(blob))
+
+
+def test_backend_registry_lists_rans(rng):
+    names = wire.backend_names()
+    for name in ("raw", "zlib", "png", "rans", "rans-ctx"):
+        assert name in names
+    with pytest.raises(ValueError, match="unknown backend"):
+        wire.encode(np.zeros((2, 2), np.uint8), _qp(2, 8, rng),
+                    backend="flif")
