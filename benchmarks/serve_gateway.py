@@ -26,6 +26,11 @@ skip the sweep), and the scheduler/channel meter every request at its true
 container length. Reports per-backend mean wire bits and throughput, and
 checks that scheduler grants exactly equal the containers' byte lengths.
 
+Part 4 (batched decode, ISSUE 4) measures the plan API's vectorized host
+decode: ``plan.decode_batch`` over 8 wire blobs vs 8 ``plan.decode`` calls,
+asserting bit-identical outputs and >= 1.5x decode throughput at batch 8
+(the acceptance gate; ``--decode-only`` runs just this part for CI).
+
 Weights are untrained — throughput and compile behaviour do not depend on
 training. Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py
 and writes benchmarks/serve_gateway_results.json.
@@ -42,6 +47,7 @@ import numpy as np
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+from repro import pipeline
 from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.core.baf import BaFConvConfig, init_baf_conv
 from repro.data.synthetic import shapes_batch_iterator
@@ -49,7 +55,7 @@ from repro.models.cnn import init_cnn
 from repro.serve import (ChannelConfig, MultiTenantGateway, OperatingPoint,
                          RateController, ServingGateway, SimulatedChannel,
                          TenantRequest, TenantSpec, build_rd_table,
-                         load_or_build_rd_table)
+                         load_or_build_rd_table, rd_grid)
 
 _ROWS: list[str] = []
 
@@ -181,24 +187,19 @@ def bench_codec_backend(params, bank, imgs, *, backend: str, seed: int = 0,
     cached keyed by backend+seed); channel + scheduler meter each request's
     actual serialized length.
     """
-    from repro.codec.container import VERSION as rans_version
-    from repro.core.codec import MAGIC as wire_magic
-
-    cs = sorted(bank)
     bits_sweep = (4, 8)
     calib = imgs[:4]                 # key must match the slice actually used
     cache = os.path.join(os.path.dirname(__file__),
                          f"rd_cache_{backend.replace('-', '_')}_seed{seed}.json")
-    key = {"backend": backend, "seed": seed, "cs": cs,
-           "bits_sweep": list(bits_sweep), "calib": int(calib.shape[0]),
-           "input": int(calib.shape[1]),
-           # coder changes that move container sizes must invalidate the
-           # cache — bump the container VERSION / wire MAGIC when they do
-           "codec_rev": f"{wire_magic.decode()}/rtc{rans_version}"}
+    # the cache key is the full operating-point grid plus the codec revision
+    # (load_or_build_rd_table appends the revision itself): any change to the
+    # grid, a backend's container format, or the wire profile rebuilds
+    ops = rd_grid(bank, bits_sweep, backend)
+    key = {"seed": seed, "calib": int(calib.shape[0]),
+           "input": int(calib.shape[1])}
     table = load_or_build_rd_table(
         cache, key,
-        lambda: build_rd_table(params, bank, calib, backend=backend,
-                               bits_sweep=bits_sweep))
+        lambda: build_rd_table(params, bank, calib, ops=ops), ops=ops)
     floor_db = float(np.median([p.psnr_db for p in table]))
     gw = MultiTenantGateway(
         params, bank,
@@ -239,17 +240,85 @@ def bench_codec_backend(params, bank, imgs, *, backend: str, seed: int = 0,
     }
 
 
+def bench_decode_batch(params, bank, imgs, *, c: int, bits: int = 6,
+                       backend: str = "zlib", batch: int = 8,
+                       reps: int = 40):
+    """Part 4: batched vs per-request host decode (plan API).
+
+    Encodes ``batch`` single-image requests at one operating point, then
+    decodes them (a) one ``plan.decode`` per request and (b) one
+    ``plan.decode_batch`` over all of them. Outputs must be bit-identical;
+    the acceptance gate (ISSUE 4) requires the batched path to deliver
+    >= 1.5x the per-request decode throughput at batch 8.
+    """
+    from repro.core.split import _jitted_cnn_fns
+
+    edge, _ = _jitted_cnn_fns()
+    baf, sel = bank[c]
+    spec = pipeline.ModelSpec(sel_idx=np.asarray(sel), params=params,
+                              baf_params=baf)
+    op = pipeline.OperatingPoint(c=c, bits=bits, backend=backend)
+    plan = pipeline.compile(op, spec)
+    blobs = [plan.encode(edge(params, imgs[i % imgs.shape[0]][None]))
+             for i in range(batch)]
+
+    # correctness first: batched output rows must equal per-request decode
+    per = [plan.decode(b) for b in blobs]
+    bat = plan.decode_batch(blobs)
+    assert np.array_equal(bat.codes,
+                          np.concatenate([d.codes for d in per]))
+    assert np.array_equal(bat.mins, np.concatenate([d.mins for d in per]))
+    assert np.array_equal(bat.maxs, np.concatenate([d.maxs for d in per]))
+
+    def time_loop(fn):
+        best = float("inf")
+        for _ in range(3):                       # best-of-3 rounds
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_per = time_loop(lambda: [plan.decode(b) for b in blobs])
+    t_bat = time_loop(lambda: plan.decode_batch(blobs))
+    speedup = t_per / t_bat
+    n = batch * reps
+    return {
+        "backend": backend, "bits": bits, "batch": batch,
+        "per_request_rps": n / t_per,
+        "batched_rps": n / t_bat,
+        "speedup": speedup,
+        "bit_identical": True,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (< 60 s)")
+    ap.add_argument("--decode-only", action="store_true",
+                    help="run only part 4 (batched decode gate, < 60 s)")
     args = ap.parse_args()
     n = args.requests or (32 if args.smoke else 96)
     c = 8
 
     params, bank, data_cfg = build_system(c=c)
     imgs = request_stream(data_cfg, n)
+
+    if args.decode_only:
+        for backend in ("zlib", "rans"):
+            r = bench_decode_batch(params, bank, imgs, c=c, backend=backend)
+            _row(f"gateway_decode_batch_{backend}", 1e6 / r["batched_rps"],
+                 f"per_req_rps={r['per_request_rps']:.0f} "
+                 f"batched_rps={r['batched_rps']:.0f} "
+                 f"speedup={r['speedup']:.2f}x bit_identical=True")
+            if backend == "zlib":
+                assert r["speedup"] >= 1.5, (
+                    f"ACCEPTANCE FAIL: decode_batch speedup "
+                    f"{r['speedup']:.2f}x below the 1.5x gate")
+        print("decode gate OK")
+        return
 
     results = {}
     for max_batch in (1, 4, 8):
@@ -299,6 +368,22 @@ def main():
              f"mean_wire_bits={r['mean_wire_bits']:.0f} "
              f"p99={r['p99_latency_ms']:.2f}ms ops={r['operating_points']} "
              f"accounting=exact")
+
+    # -- part 4: batched host decode (plan API, ISSUE 4 gate) ---------------
+    for backend in ("zlib", "rans"):
+        r = bench_decode_batch(params, bank_multi, imgs, c=c, backend=backend)
+        results[f"decode_batch_{backend}"] = r
+        _row(f"gateway_decode_batch_{backend}", 1e6 / r["batched_rps"],
+             f"per_req_rps={r['per_request_rps']:.0f} "
+             f"batched_rps={r['batched_rps']:.0f} "
+             f"speedup={r['speedup']:.2f}x bit_identical=True")
+    dec = results["decode_batch_zlib"]
+    assert dec["speedup"] >= 1.5, (
+        f"ACCEPTANCE FAIL: decode_batch speedup {dec['speedup']:.2f}x at "
+        f"batch {dec['batch']} is below the 1.5x gate")
+    _row("gateway_decode_gate", 0.0,
+         f"decode_batch {dec['speedup']:.2f}x >= 1.5x at batch "
+         f"{dec['batch']}: OK")
 
     t1, t16 = results["tenants_1"], results["tenants_16"]
     tp_ratio = t16["rps_cloud_compute"] / t1["rps_cloud_compute"]

@@ -1,21 +1,28 @@
-"""Adaptive rate control demo: the channel's bit budget picks (C, bits).
+"""Compression-plan + adaptive rate control demo.
 
     PYTHONPATH=src python examples/gateway_demo.py [--fast]
 
 1. pretrain the tiny Tier-A CNN and train one BaF predictor per C,
-2. build the offline rate-distortion table by sweeping (C, bits) with the
-   repo's fidelity metrics (serve/rate_control.py),
-3. set a PSNR quality floor and serve the same traffic through gateways whose
+2. compile a CompressionPlan from a declarative OperatingPoint and run one
+   request through encode -> decode_batch -> restore by hand (the staged
+   API everything below is built on),
+3. build the offline rate-distortion table by sweeping operating points with
+   the repo's fidelity metrics (serve/rate_control.py),
+4. set a PSNR quality floor and serve the same traffic through gateways whose
    channels grant a full and a HALVED per-tick bit budget — the controller
-   moves to a cheaper operating point while staying at/above the floor.
+   moves to a cheaper operating point while staying at/above the floor,
+5. multi-tenant serving over one shared uplink, and capability negotiation:
+   a gateway that does not speak rANS downgrades the operating point to zlib
+   instead of failing on the cloud side.
 """
 import argparse
 
 import numpy as np
 
+from repro import pipeline
 from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.data.synthetic import shapes_batch_iterator
-from repro.serve import (ChannelConfig, ContentKeyedController,
+from repro.serve import (Capabilities, ChannelConfig, ContentKeyedController,
                          MultiTenantGateway, RateController, ServingGateway,
                          SimulatedChannel, TenantRequest, TenantSpec,
                          build_rd_table)
@@ -38,6 +45,23 @@ for c in (4, 8, 16):
                     steps=40 if args.fast else 150, verbose=False)
     bank[c] = (res.baf_params, res.sel_idx)
     print(f"  BaF trained for C={c}")
+
+print("== 1b. the plan API: one operating point, end to end ==")
+op = pipeline.OperatingPoint(c=8, bits=6, backend="rans")
+spec = pipeline.ModelSpec(sel_idx=np.asarray(bank[8][1]), params=params,
+                          baf_params=bank[8][0])
+plan = pipeline.compile(op, spec)
+from repro.core.split import _jitted_cnn_fns
+edge_fn, cloud_fn = _jitted_cnn_fns()
+demo_imgs, _ = next(shapes_batch_iterator(
+    data_cfg._replace(batch_size=1), seed=1))
+blobs = [plan.encode(edge_fn(params, np.asarray(demo_imgs))) for _ in range(4)]
+decoded = plan.decode_batch(blobs)          # one vectorized host decode
+z_tilde = plan.restore(decoded)             # one jitted BaF restore
+logits = cloud_fn(params, z_tilde)
+print(f"  op {op.resolve()}")
+print(f"  4 requests -> {sum(b.nbytes for b in blobs)} wire bytes, "
+      f"decode_batch {decoded.codes.shape}, logits {np.asarray(logits).shape}")
 
 print("== 2. offline rate-distortion table (C x bits sweep) ==")
 imgs, _ = next(shapes_batch_iterator(data_cfg, seed=99))
@@ -117,3 +141,19 @@ print(f"uplink grant shares : premium {shares['premium']:.2f}, "
       f"besteffort {shares['besteffort']:.2f}")
 assert len(mt_resp["premium"]) == 6 and len(mt_resp["besteffort"]) == 6
 print("OK: both tenants fully served over the shared budget")
+
+print("\n== 6. capability negotiation: a zlib-only gateway meets rANS ==")
+rans_op = pipeline.OperatingPoint(c=8, bits=8, backend="rans")
+legacy = ServingGateway(params, bank, default_op=rans_op,
+                        capabilities=Capabilities(backends=("zlib",)),
+                        max_batch=4)
+resp, _ = legacy.serve(traffic[:2])
+print(f"requested {rans_op.backend!r} -> served on "
+      f"{resp[0].op.wire_backend!r} (downgraded, not refused)")
+try:
+    ServingGateway(params, bank, default_op=rans_op,
+                   capabilities=Capabilities(backends=("zlib",),
+                                             downgrade=False))
+except pipeline.NegotiationError as e:
+    print(f"strict gateway refuses instead: {e}")
+print("OK: negotiation decided before any bytes were encoded")

@@ -61,7 +61,9 @@ def pack_bits(codes: np.ndarray, bits: int) -> bytes:
     if bits == 8:
         return flat.astype(np.uint8).tobytes()
     if bits == 16:
-        return flat.astype(np.uint16).tobytes()
+        # explicit little-endian, matching unpack's '<u2' view — the wire
+        # format must not depend on host byte order
+        return flat.astype("<u2").tobytes()
     n = flat.size
     total_bits = n * bits
     out = np.zeros((total_bits + 7) // 8, dtype=np.uint8)
@@ -76,23 +78,39 @@ def pack_bits(codes: np.ndarray, bits: int) -> bytes:
 
 
 def unpack_bits(data: bytes, bits: int, count: int) -> np.ndarray:
-    buf = np.frombuffer(data, dtype=np.uint8)
+    return unpack_bits_batch([data], bits, count)[0]
+
+
+def unpack_bits_batch(streams: list[bytes], bits: int,
+                      count: int) -> np.ndarray:
+    """Unpack N equal-length bitstreams in one vectorized pass -> (N, count).
+
+    Every stream packs exactly ``count`` codes at ``bits`` each (all wire
+    payloads of one micro-batch bucket share an operating point and shape),
+    so the per-bit gather loop runs ``bits`` times *total* instead of
+    ``bits`` times per request — the coalesced host decode the batched
+    pipeline (repro.pipeline) is built on.
+    """
+    n = len(streams)
     need = (count * bits + 7) // 8
-    if len(data) < need:
-        raise ValueError(
-            f"bitstream too short: {len(data)} bytes but {count} codes at "
-            f"{bits} bits need {need}")
+    for i, s in enumerate(streams):
+        if len(s) < need:
+            raise ValueError(
+                f"bitstream {i} too short: {len(s)} bytes but {count} codes "
+                f"at {bits} bits need {need}")
+    buf = np.stack([np.frombuffer(s, dtype=np.uint8, count=need)
+                    for s in streams]) if n else np.empty((0, need), np.uint8)
     if bits == 8:
-        return buf[:count].copy()
+        return buf[:, :count].copy()
     if bits == 16:
-        return np.frombuffer(data[:2 * count], dtype=np.uint16).copy()
-    out = np.zeros(count, dtype=np.uint32)
+        return np.ascontiguousarray(buf[:, :2 * count]).view("<u2")[:, :count]
+    out = np.zeros((n, count), dtype=np.uint32)
     positions = np.arange(count, dtype=np.uint64) * bits
     for b in range(bits):
         bitpos = positions + b
         byte_idx = (bitpos >> 3).astype(np.int64)
         bit_in_byte = (bitpos & 7).astype(np.uint8)
-        vals = (buf[byte_idx] >> bit_in_byte) & 1
+        vals = (buf[:, byte_idx] >> bit_in_byte) & 1
         out |= vals.astype(np.uint32) << b
     return out
 
@@ -108,6 +126,10 @@ class _Backend:
     tiled: bool        # expects the pre-tiled 2D image (core/split.py)
     encode: Callable   # (codes, bits, level) -> payload bytes
     decode: Callable   # (payload, shape, bits, count) -> flat/shaped codes
+    # optional coalesced decode across N same-shape payloads:
+    # (payloads, shape, bits, count) -> (N, count) codes. None = the batched
+    # pipeline falls back to a per-payload loop over ``decode``.
+    decode_batch: Callable | None = None
 
 
 _REGISTRY: dict[str, _Backend] = {}
@@ -118,14 +140,16 @@ _LAZY: dict[str, Callable[[], None]] = {}
 
 
 def register_backend(name: str, wire_id: int, *, tiled: bool,
-                     encode: Callable, decode: Callable) -> None:
+                     encode: Callable, decode: Callable,
+                     decode_batch: Callable | None = None) -> None:
     if name in _REGISTRY:
         raise ValueError(f"backend {name!r} already registered")
     if wire_id in _BY_ID:
         raise ValueError(f"wire id {wire_id} already taken by "
                          f"{_BY_ID[wire_id]!r}")
     _REGISTRY[name] = _Backend(name=name, wire_id=wire_id, tiled=tiled,
-                               encode=encode, decode=decode)
+                               encode=encode, decode=decode,
+                               decode_batch=decode_batch)
     _BY_ID[wire_id] = name
 
 
@@ -158,12 +182,21 @@ def _zlib_decode(payload, shape, bits, count):
     return unpack_bits(zlib.decompress(payload), bits, count)
 
 
+def _zlib_decode_batch(payloads, shape, bits, count):
+    return unpack_bits_batch([zlib.decompress(p) for p in payloads],
+                             bits, count)
+
+
 def _raw_encode(codes, bits, level):
     return pack_bits(codes, bits)
 
 
 def _raw_decode(payload, shape, bits, count):
     return unpack_bits(payload, bits, count)
+
+
+def _raw_decode_batch(payloads, shape, bits, count):
+    return unpack_bits_batch(list(payloads), bits, count)
 
 
 def _png_encode(codes, bits, level):
@@ -191,11 +224,11 @@ def _png_decode(payload, shape, bits, count):
 
 
 register_backend("zlib", 0, tiled=True, encode=_zlib_encode,
-                 decode=_zlib_decode)
+                 decode=_zlib_decode, decode_batch=_zlib_decode_batch)
 register_backend("png", 1, tiled=True, encode=_png_encode,
                  decode=_png_decode)
 register_backend("raw", 2, tiled=True, encode=_raw_encode,
-                 decode=_raw_decode)
+                 decode=_raw_decode, decode_batch=_raw_decode_batch)
 
 
 def _register_rans_backends() -> None:
@@ -332,6 +365,43 @@ def decode(enc: EncodedTensor) -> tuple[np.ndarray, QuantParams]:
     codes = np.asarray(be.decode(enc.payload, enc.shape, enc.bits, count))
     dtype = np.uint8 if enc.bits <= 8 else (np.uint16 if enc.bits <= 16 else np.uint32)
     return codes.astype(dtype).reshape(enc.shape), qp
+
+
+def decode_many(encs: "list[EncodedTensor]") -> tuple[np.ndarray,
+                                                      list[QuantParams]]:
+    """Decode N same-(backend, bits, shape) tensors -> ((N, *shape), qps).
+
+    The batched host-decode primitive behind ``repro.pipeline``'s
+    ``CompressionPlan.decode_batch``: backends that registered a
+    ``decode_batch`` hook (zlib, raw) coalesce the per-payload numpy loops
+    into one vectorized pass; the rest fall back to a per-payload loop but
+    still hand the caller one stacked array.
+    """
+    if not encs:
+        raise ValueError("decode_many needs at least one tensor")
+    first = encs[0]
+    for e in encs[1:]:
+        if (e.backend, e.bits, e.shape) != (first.backend, first.bits,
+                                            first.shape):
+            raise ValueError(
+                f"decode_many requires a homogeneous batch; got "
+                f"({e.backend}, {e.bits}, {e.shape}) vs "
+                f"({first.backend}, {first.bits}, {first.shape})")
+    be = _get_backend(first.backend)
+    count = int(np.prod(first.shape)) if first.shape else 1
+    if be.decode_batch is not None:
+        codes = np.asarray(be.decode_batch([e.payload for e in encs],
+                                           first.shape, first.bits, count))
+    else:
+        codes = np.stack([
+            np.asarray(be.decode(e.payload, e.shape, e.bits, count)).ravel()
+            for e in encs])
+    dtype = (np.uint8 if first.bits <= 8
+             else (np.uint16 if first.bits <= 16 else np.uint32))
+    codes = codes.astype(dtype, copy=False).reshape(
+        (len(encs),) + tuple(first.shape))
+    qps = [_unpack_side_info(e.side_info, e.bits) for e in encs]
+    return codes, qps
 
 
 def empirical_entropy_bits(codes: np.ndarray, bits: int) -> float:

@@ -5,14 +5,18 @@ Device-side math (quantize, BaF, consolidation) is jit-able JAX; the entropy
 codec is host code (DESIGN.md §4). The engine measures real bits on the wire,
 including the C*32 side-info bits, matching the paper's accounting.
 
-The encode/decode/restore paths are module-level pure functions parameterized
-by ``(C, bits)`` so callers that vary the operating point per request (the
-serving gateway, repro.serve.gateway) reuse one jit cache entry per distinct
-``(C, bits, batch-bucket)`` instead of re-tracing per engine instance.
-``SplitInferenceEngine`` remains the convenient single-operating-point wrapper.
+Coding configuration now lives in ``repro.pipeline``: build an
+``OperatingPoint``, ``compile`` it against a ``ModelSpec``, and run the plan's
+``encode`` / ``decode_batch`` / ``restore``. This module keeps the jitted
+device-side restore functions (one trace per ``(C, bits, batch-bucket)``,
+shared process-wide) plus ``SplitInferenceEngine``, the single-operating-point
+wrapper, which itself executes a plan. The old loose-tuple entry points
+``encode_activation`` / ``decode_stream`` remain as deprecation shims for one
+release — see docs/MIGRATION.md.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from functools import lru_cache, partial
 
@@ -23,7 +27,7 @@ import numpy as np
 from repro.core import codec as wire
 from repro.core.baf import baf_conv_predict, scatter_consolidated
 from repro.core.quant import QuantParams, compute_quant_params, dequantize, quantize
-from repro.core.tiling import tile_batch, untile_batch
+from repro.core.tiling import untile_batch
 
 
 @dataclass(frozen=True)
@@ -68,44 +72,54 @@ class SplitStats:
 
 
 # ---------------------------------------------------------------------------
-# Pure encode / decode / restore paths (shared by engine and gateway)
+# Deprecated loose-tuple entry points (one-release shims over repro.pipeline)
 # ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=64)
+def _shim_spec(sel: tuple):
+    # encode/decode-only spec (no weights); cached so repeated shim calls
+    # with one channel order reuse one compiled plan
+    from repro import pipeline  # lazy: pipeline imports this module
+    return pipeline.ModelSpec(sel_idx=np.asarray(sel, np.int32))
+
+
+def _plan_for(sel_idx, bits: int, backend: str):
+    from repro import pipeline
+    sel = tuple(int(i) for i in np.asarray(sel_idx).ravel())
+    op = pipeline.OperatingPoint(c=len(sel), bits=bits, backend=backend)
+    return pipeline.compile(op, _shim_spec(sel))
+
 
 def encode_activation(z, sel_idx, bits: int, *,
                       backend: str = "zlib") -> tuple[wire.EncodedTensor, SplitStats]:
-    """Quantize/tile/entropy-code the split activation at one operating point.
+    """Deprecated: quantize/tile/entropy-code at one loose operating point.
 
-    z : (B, H, W, P) full split-layer BN output
-    sel_idx : (C,) ordered selected-channel indices
+    Use ``repro.pipeline.compile(OperatingPoint(...), ModelSpec(...)).encode``
+    — the plan owns backend/tiling/context selection and returns a
+    ``WireBlob`` the batched decode path understands.
     """
-    sel_idx = jnp.asarray(np.asarray(sel_idx), jnp.int32)
-    z_sel = z[..., sel_idx]                        # (B, H, W, C)
-    # per-example side info, as transmitted in the paper (one m,M per
-    # channel per image; counted at 32 bits/channel in total_bits)
-    qp = compute_quant_params(z_sel, bits, per_example=True)
-    codes = np.asarray(quantize(z_sel, qp))
-    if wire.backend_wants_tiling(backend):
-        # image-style codecs (png, and the zlib/raw stand-ins) get the
-        # paper's tiled 2D image, one per batch element, stacked vertically
-        tiled = np.asarray(tile_batch(jnp.asarray(codes)))   # (B, rH, cW)
-        stream = tiled.reshape(-1, tiled.shape[-1])
-    else:
-        # rANS codes the channel-last tensor directly: its container keeps
-        # channels as separate tile chunks, no 2D detour needed
-        stream = codes
-    enc = wire.encode(stream, qp, backend=backend)
-    stats = SplitStats(
-        total_bits=enc.total_bits(),
-        payload_bits=8 * len(enc.payload),
-        side_info_bits=8 * len(enc.side_info),
-        raw_bits=int(np.prod(z.shape)) * 32,
-        entropy_bits=wire.empirical_entropy_bits(codes, bits),
-        wire_bits=enc.wire_bits(),
-    )
-    return enc, stats
+    warnings.warn(
+        "encode_activation is deprecated; build a repro.pipeline."
+        "CompressionPlan and call plan.encode (docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    blob = _plan_for(sel_idx, bits, backend).encode(z)
+    return blob.to_tensor(), blob.stats
 
 
 def decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
+    """Deprecated: wire tensor -> (codes, mins, maxs) one request at a time.
+
+    Use ``plan.decode_batch`` — it coalesces the host decode across a whole
+    micro-batch and returns a restore-ready ``DecodedBatch``.
+    """
+    warnings.warn(
+        "decode_stream is deprecated; build a repro.pipeline.CompressionPlan "
+        "and call plan.decode / plan.decode_batch (docs/MIGRATION.md)",
+        DeprecationWarning, stacklevel=2)
+    return _decode_stream(enc, batch, c)
+
+
+def _decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
     """Wire blob -> (codes (B, H, W, C), mins (B, 1, 1, C), maxs (B, 1, 1, C))."""
     stream, qp = wire.decode(enc)
     if wire.backend_wants_tiling(enc.backend):
@@ -213,18 +227,23 @@ def fidelity_metrics(params, baf_params, sel_idx, img, *, bits: int,
 class SplitInferenceEngine:
     """Orchestrates the paper's mobile/cloud pipeline for the Tier-A CNN.
 
+    A thin wrapper that compiles one :class:`repro.pipeline.CompressionPlan`
+    at construction and executes it end to end (the plan is exposed as
+    ``self.plan`` for callers that want the staged API).
+
     Parameters
     ----------
     params : CNN params (see models/cnn.py)
     baf_params : trained BaF predictor params (core/baf.py)
     sel_idx : ordered selected-channel indices (core/selection.py), length C
     bits : quantizer depth n
-    backend : wire codec backend ('zlib' | 'png' | 'raw')
+    backend : wire codec backend ('zlib' | 'png' | 'raw' | 'rans' | ...)
     """
 
     def __init__(self, params, baf_params, sel_idx, *, bits: int = 8,
                  backend: str = "zlib", consolidation: bool = True):
-        from repro.models.cnn import cnn_cloud, cnn_edge  # local: avoid cycle
+        from repro import pipeline                     # lazy: avoid cycle
+        from repro.models.cnn import cnn_cloud, cnn_edge
         self._edge_fn = jax.jit(lambda p, img: cnn_edge(p, img)[1])
         self._cloud_fn = jax.jit(cnn_cloud)
         self.params = params
@@ -233,20 +252,31 @@ class SplitInferenceEngine:
         self.bits = bits
         self.backend = backend
         self.consolidation = consolidation
+        self.op = pipeline.OperatingPoint(c=int(self.sel_idx.shape[0]),
+                                          bits=bits, backend=backend)
+        self.spec = pipeline.ModelSpec(sel_idx=np.asarray(sel_idx),
+                                       params=params, baf_params=baf_params)
+        self.plan = pipeline.compile(self.op, self.spec, fused=False,
+                                     consolidation=consolidation)
 
     # -- mobile side --------------------------------------------------------
-    def encode(self, img) -> tuple[wire.EncodedTensor, SplitStats]:
+    def encode(self, img):
+        """Edge forward + plan encode -> (WireBlob, SplitStats)."""
         z = self._edge_fn(self.params, img)            # (B, H, W, P)
-        return encode_activation(z, self.sel_idx, self.bits,
-                                 backend=self.backend)
+        blob = self.plan.encode(z)
+        return blob, blob.stats
 
     # -- cloud side ----------------------------------------------------------
-    def decode_and_infer(self, enc: wire.EncodedTensor, batch: int):
-        codes, mins, maxs = decode_stream(enc, batch, len(self.sel_idx))
-        z_tilde = restore_codes(self.baf_params, self.params["split"],
-                                self.sel_idx, codes, mins, maxs,
-                                bits=self.bits,
-                                consolidation=self.consolidation)
+    def decode_and_infer(self, enc, batch: int):
+        """Decode + BaF restore + cloud forward.
+
+        Accepts a plan ``WireBlob`` or a bare ``EncodedTensor`` (legacy
+        callers that shipped raw wire tensors around).
+        """
+        from repro import pipeline
+        blob = (enc if isinstance(enc, pipeline.WireBlob)
+                else pipeline.blob_from_tensor(enc, self.op, batch))
+        z_tilde = self.plan.restore(self.plan.decode(blob))
         return self._cloud_fn(self.params, z_tilde)
 
     # -- fidelity metrics ------------------------------------------------------
@@ -258,8 +288,8 @@ class SplitInferenceEngine:
 
     # -- end to end ----------------------------------------------------------
     def __call__(self, img):
-        enc, stats = self.encode(img)
-        blob = enc.to_bytes()                          # actual wire round-trip
-        logits = self.decode_and_infer(wire.EncodedTensor.from_bytes(blob),
-                                       batch=img.shape[0])
+        blob, stats = self.encode(img)
+        # decode parses blob.data through EncodedTensor.from_bytes — the
+        # actual wire round-trip, header validation included
+        logits = self.decode_and_infer(blob, batch=img.shape[0])
         return logits, stats

@@ -1,0 +1,28 @@
+"""Unified compression-pipeline API: declarative operating points compiled
+into executable plans.
+
+    from repro import pipeline
+
+    op   = pipeline.OperatingPoint(c=8, bits=6, backend="rans")
+    plan = pipeline.compile(op, pipeline.ModelSpec(sel_idx=sel,
+                                                   params=params,
+                                                   baf_params=baf))
+    blob    = plan.encode(z)                 # quantize/tile/entropy-code
+    decoded = plan.decode_batch([blob, ...]) # vectorized host decode
+    z_tilde = plan.restore(decoded)          # jitted BaF restore
+
+One plan owns a request's coding configuration end to end; serve/ and the
+benchmarks construct all coding state through this package (the old loose
+``(C, bits, backend)`` entry points in core/split.py are deprecated shims).
+"""
+from repro.pipeline.op import (WIRE_PROFILE_VERSION, Capabilities,
+                               NegotiationError, OperatingPoint, negotiate)
+from repro.pipeline.plan import (CompressionPlan, DecodedBatch, ModelSpec,
+                                 WireBlob, blob_from_tensor, compile)
+
+__all__ = [
+    "WIRE_PROFILE_VERSION", "Capabilities", "NegotiationError",
+    "OperatingPoint", "negotiate",
+    "CompressionPlan", "DecodedBatch", "ModelSpec", "WireBlob",
+    "blob_from_tensor", "compile",
+]

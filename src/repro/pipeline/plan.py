@@ -1,0 +1,303 @@
+"""Plan/execute split for the BaF compression pipeline.
+
+``compile(op, model_spec)`` turns a declarative :class:`OperatingPoint` plus
+model weights into a :class:`CompressionPlan` — a jit-like executable object
+owning one request's coding configuration end to end:
+
+    plan.encode(z)            -> WireBlob         (quantize/tile/entropy-code)
+    plan.decode_batch(blobs)  -> DecodedBatch     (vectorized host decode)
+    plan.restore(decoded)     -> z_tilde          (jitted BaF restore)
+
+Compilation is cached per ``(operating point, model spec, flags)`` and the
+device-side restore reuses one jitted trace per distinct
+``(C, bits, batch-bucket)`` — callers that bucket their batches
+(serve/batcher.py) never re-trace, no matter how many plans they hold.
+
+``decode_batch`` is the batched/vectorized host decode path: N same-bucket
+wire blobs are parsed once, their payloads coalesced through the backend's
+vectorized batch decoder (core/codec.py ``decode_many``), and the channel
+untiling runs as one numpy pass over the whole stack instead of one
+jnp dispatch per request. Outputs are bit-identical to per-request decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec as wire
+from repro.core.quant import compute_quant_params, quantize
+from repro.core.split import (SplitStats, restore_codes, restore_codes_fused)
+from repro.core.tiling import tile_batch, tile_grid
+from repro.pipeline.op import OperatingPoint
+
+
+@dataclass(frozen=True, eq=False)
+class ModelSpec:
+    """Model-side inputs a plan binds to.
+
+    eq/hash are object identity: two specs are "the same model" only when
+    they are literally the same object, which is what the compile cache keys
+    on (params pytrees are not hashable, and value-comparing them per encode
+    would defeat the point of a cached plan).
+
+    ``params``/``baf_params`` may be None for an encode/decode-only plan
+    (e.g. the edge side of a split deployment); ``restore`` then refuses.
+
+    Compiled plans cache *on the spec itself* (``_plans``), so dropping the
+    spec (e.g. on a model reload) releases its plans and weights — nothing
+    is pinned in a process-wide cache.
+    """
+    sel_idx: Any                 # (C,) ordered selected-channel indices
+    params: Any = None           # CNN params (models/cnn.py); needs ["split"]
+    baf_params: Any = None       # trained BaF predictor for this C
+    _plans: dict = field(default_factory=dict, init=False, repr=False)
+
+
+@dataclass(frozen=True)
+class WireBlob:
+    """One request's serialized container plus the plan-level metadata the
+    cloud side needs before it decodes a single payload byte: the operating
+    point and the codes shape (the micro-batcher buckets on these)."""
+    data: bytes
+    op: OperatingPoint
+    shape: tuple                 # codes shape, (B, H, W, C)
+    stats: SplitStats | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data)
+
+    def to_tensor(self) -> wire.EncodedTensor:
+        """Parse back to the wire-format view (header validation included)."""
+        return wire.EncodedTensor.from_bytes(self.data)
+
+
+@dataclass
+class DecodedBatch:
+    """Stacked decode output, restore-ready."""
+    codes: np.ndarray            # (N, H, W, C) integer codes
+    mins: np.ndarray             # (N, 1, 1, C) fp16
+    maxs: np.ndarray             # (N, 1, 1, C) fp16
+
+    def __len__(self) -> int:
+        return self.codes.shape[0]
+
+    def pad_to(self, target: int) -> "DecodedBatch":
+        """Pad to a bucket size by repeating the last row (dropped after
+        restore); the device never sees a shape outside the bucket set."""
+        n = len(self)
+        if target < n:
+            raise ValueError(f"cannot pad {n} rows down to {target}")
+        if target == n:
+            return self
+        reps = [1] * n
+        reps[-1] += target - n
+        rep = np.repeat
+        return DecodedBatch(codes=rep(self.codes, reps, axis=0),
+                            mins=rep(self.mins, reps, axis=0),
+                            maxs=rep(self.maxs, reps, axis=0))
+
+
+def _untile_np(tiles: np.ndarray, c: int) -> np.ndarray:
+    """(M, rows*H, cols*W) tiled images -> (M, H, W, C), pure numpy.
+
+    Vectorized over the whole stack — the host-side inverse of
+    core/tiling.py's ``tile_channels`` without a per-request jnp dispatch.
+    """
+    rows, cols = tile_grid(c)
+    m, th, tw = tiles.shape
+    h, w = th // rows, tw // cols
+    y = tiles.reshape(m, rows, h, cols, w)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(m, c, h, w)
+    return np.ascontiguousarray(y.transpose(0, 2, 3, 1))
+
+
+class CompressionPlan:
+    """Executable coding pipeline for one operating point.
+
+    Build via :func:`compile` (cached), not directly. The plan owns the
+    resolved operating point; every stage reads configuration from it, so
+    there is no loose ``(C, bits, backend)`` plumbing between stages.
+    """
+
+    def __init__(self, op: OperatingPoint, spec: ModelSpec, *,
+                 fused: bool = True, consolidation: bool = True):
+        self.op = op.resolve()
+        self.spec = spec
+        self.fused = fused
+        self.consolidation = consolidation
+        sel = np.asarray(spec.sel_idx)
+        if sel.shape[0] != self.op.c:
+            raise ValueError(
+                f"operating point transmits C={self.op.c} channels but the "
+                f"model spec selects {sel.shape[0]}")
+        self._sel = jnp.asarray(sel, jnp.int32)
+        # resolve the backend now: a typo'd backend fails at compile time,
+        # not on the first request
+        wire.backend_wants_tiling(self.op.wire_backend)
+
+    # -- keys ---------------------------------------------------------------
+    @property
+    def trace_key(self) -> tuple:
+        """What the jitted restore actually specializes on (plus the batch
+        bucket shape supplied at call time)."""
+        return (self.op.c, self.op.bits, self.fused, self.consolidation)
+
+    # -- encode (edge side) -------------------------------------------------
+    def _quantize(self, z) -> tuple[np.ndarray, "object"]:
+        """Shared quantize stage -> (codes (B,H,W,C), QuantParams)."""
+        z_sel = z[..., self._sel]
+        qp = compute_quant_params(z_sel, self.op.bits, per_example=True)
+        return np.asarray(quantize(z_sel, qp)), qp
+
+    def quantize(self, z) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Quantize the split activation -> (codes, mins, maxs), no coding.
+
+        The reference the round-trip property tests compare decode against —
+        it shares the quantize stage with :meth:`encode` by construction.
+        """
+        codes, qp = self._quantize(z)
+        b, c = codes.shape[0], codes.shape[-1]
+        mins = np.asarray(qp.mins, np.float16).reshape(b, 1, 1, c)
+        maxs = np.asarray(qp.maxs, np.float16).reshape(b, 1, 1, c)
+        return codes, mins, maxs
+
+    def encode(self, z) -> WireBlob:
+        """Quantize/tile/entropy-code the split activation ``z`` (B, H, W, P)
+        and serialize the container; returns the blob with wire accounting."""
+        codes, qp = self._quantize(z)
+        if self.op.tiling == "tiled":
+            # image-style codecs get the paper's tiled 2D image, one per
+            # batch element, stacked vertically
+            tiled = np.asarray(tile_batch(jnp.asarray(codes)))
+            stream = tiled.reshape(-1, tiled.shape[-1])
+        else:
+            # direct backends (rANS) code the channel-last tensor as-is
+            stream = codes
+        enc = wire.encode(stream, qp, backend=self.op.wire_backend)
+        stats = SplitStats(
+            total_bits=enc.total_bits(),
+            payload_bits=8 * len(enc.payload),
+            side_info_bits=8 * len(enc.side_info),
+            raw_bits=int(np.prod(z.shape)) * 32,
+            entropy_bits=wire.empirical_entropy_bits(codes, self.op.bits),
+            wire_bits=enc.wire_bits(),
+        )
+        return WireBlob(data=enc.to_bytes(), op=self.op,
+                        shape=tuple(codes.shape), stats=stats)
+
+    # -- decode (cloud side, host) ------------------------------------------
+    def _check_blob(self, blob: WireBlob, shape: tuple) -> None:
+        if blob.op.resolve() != self.op:
+            raise ValueError(
+                f"blob was encoded at {blob.op.resolve()}, this plan "
+                f"executes {self.op}")
+        if tuple(blob.shape) != shape:
+            raise ValueError(
+                f"mixed shapes in one decode batch: {blob.shape} vs {shape}")
+
+    def decode(self, blob: WireBlob) -> DecodedBatch:
+        """Single-blob decode (= ``decode_batch([blob])``)."""
+        return self.decode_batch([blob])
+
+    def decode_batch(self, blobs: "list[WireBlob]") -> DecodedBatch:
+        """Vectorized host decode across N same-bucket requests.
+
+        All blobs must share this plan's operating point and one codes shape
+        (the micro-batcher's bucket invariant). Payload entropy-decode is
+        coalesced by the backend's batch decoder where registered and the
+        untiling runs once over the whole stack; output rows are bit-exact
+        with per-request decode, in input order.
+        """
+        if not blobs:
+            raise ValueError("decode_batch needs at least one blob")
+        shape = tuple(blobs[0].shape)
+        for blob in blobs:
+            self._check_blob(blob, shape)
+        encs = [wire.EncodedTensor.from_bytes(b.data) for b in blobs]
+        streams, qps = wire.decode_many(encs)
+        n = len(blobs)
+        b, h, w, c = shape
+        if self.op.tiling == "tiled":
+            rows, cols = tile_grid(c)
+            codes = _untile_np(streams.reshape(n * b, rows * h, cols * w), c)
+        else:
+            codes = streams.reshape(n * b, h, w, c)
+        mins = np.stack([np.asarray(qp.mins, np.float16) for qp in qps])
+        maxs = np.stack([np.asarray(qp.maxs, np.float16) for qp in qps])
+        return DecodedBatch(codes=codes,
+                            mins=mins.reshape(n * b, 1, 1, c),
+                            maxs=maxs.reshape(n * b, 1, 1, c))
+
+    # -- restore (cloud side, device) ---------------------------------------
+    def restore(self, decoded: DecodedBatch):
+        """Dequantize + BaF restore; returns the full-width split activation.
+
+        One jitted trace per ``(C, bits, bucket shape)`` — shared process-wide
+        across plans and gateways via the module-level jit caches in
+        core/split.py.
+        """
+        if self.spec.params is None or self.spec.baf_params is None:
+            raise ValueError(
+                "plan was compiled without model weights (encode/decode "
+                "only); supply params and baf_params in the ModelSpec "
+                "to restore")
+        split = self.spec.params["split"]
+        codes = jnp.asarray(decoded.codes)
+        mins = jnp.asarray(decoded.mins)
+        maxs = jnp.asarray(decoded.maxs)
+        if self.fused:
+            return restore_codes_fused(self.spec.baf_params, split,
+                                       self._sel, codes, mins, maxs,
+                                       bits=self.op.bits)
+        return restore_codes(self.spec.baf_params, split, self._sel,
+                             codes, mins, maxs, bits=self.op.bits,
+                             consolidation=self.consolidation)
+
+    def __repr__(self) -> str:
+        return (f"CompressionPlan(op={self.op}, fused={self.fused}, "
+                f"consolidation={self.consolidation})")
+
+
+def blob_from_tensor(enc: wire.EncodedTensor, op: OperatingPoint,
+                     batch: int) -> WireBlob:
+    """Wrap a parsed wire tensor as a plan blob (legacy-entry-point bridge).
+
+    The container's ``shape`` field stores the coded *stream* shape — the
+    tiled 2D image for image-style backends — so the codes shape is
+    reconstructed from the operating point's tiling grid.
+    """
+    rop = op.resolve()
+    if rop.tiling == "tiled":
+        rows, cols = tile_grid(rop.c)
+        th, tw = enc.shape
+        shape = (batch, th // (batch * rows), tw // cols, rop.c)
+    else:
+        shape = tuple(enc.shape)
+    return WireBlob(data=enc.to_bytes(), op=rop, shape=shape)
+
+
+def compile(op: OperatingPoint, model_spec: ModelSpec, *,   # noqa: A001
+            fused: bool = True,
+            consolidation: bool = True) -> CompressionPlan:
+    """Build (or fetch the cached) plan for ``op`` against ``model_spec``.
+
+    Plans cache on the spec object per ``(op, flags)`` — the cache lives
+    exactly as long as the spec does, so dropped specs free their weights.
+    The underlying jit traces are cached independently per
+    ``(C, bits, bucket)``, so even a fresh plan object re-traces nothing
+    the process has already compiled.
+    """
+    # key on the *resolved* point: an auto-field op on the encode side and
+    # its resolved twin from a decoded blob must share one cached plan
+    op = op.resolve()
+    key = (op, fused, consolidation)
+    plan = model_spec._plans.get(key)
+    if plan is None:
+        plan = CompressionPlan(op, model_spec, fused=fused,
+                               consolidation=consolidation)
+        model_spec._plans[key] = plan
+    return plan

@@ -5,27 +5,33 @@ batcher/telemetry).
 The LM engine pulls in the transformer model zoo, so it is intentionally NOT
 imported here — use ``from repro.serve.engine import ...`` directly.
 """
-from repro.serve.batcher import (BucketKey, DecodedRequest, MicroBatch,
-                                 MicroBatcher, bucket_sizes)
+from repro.pipeline import Capabilities, NegotiationError
+from repro.serve.batcher import (BucketKey, DecodedRequest, EncodedRequest,
+                                 MicroBatch, MicroBatcher, PlanBucketKey,
+                                 bucket_sizes)
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
 from repro.serve.gateway import (GatewayResponse, MultiTenantGateway,
                                  ServingGateway, TenantRequest)
 from repro.serve.rate_control import (ContentKeyedController,
                                       OperatingPoint, RateController,
                                       RDPoint, build_rd_table,
-                                      load_or_build_rd_table,
-                                      rd_table_from_json, rd_table_to_json)
+                                      codec_revision, load_or_build_rd_table,
+                                      rd_grid, rd_table_from_json,
+                                      rd_table_to_json)
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
 from repro.serve.telemetry import (RequestRecord, Telemetry, jain_fairness)
 
 __all__ = [
-    "BucketKey", "DecodedRequest", "MicroBatch", "MicroBatcher",
-    "bucket_sizes", "ChannelConfig", "SimulatedChannel", "Transmission",
+    "BucketKey", "DecodedRequest", "EncodedRequest", "MicroBatch",
+    "MicroBatcher", "PlanBucketKey", "bucket_sizes",
+    "Capabilities", "NegotiationError",
+    "ChannelConfig", "SimulatedChannel", "Transmission",
     "GatewayResponse", "MultiTenantGateway", "ServingGateway",
     "TenantRequest", "ContentKeyedController", "OperatingPoint",
-    "RateController", "RDPoint", "build_rd_table",
-    "load_or_build_rd_table", "rd_table_from_json", "rd_table_to_json",
+    "RateController", "RDPoint", "build_rd_table", "codec_revision",
+    "load_or_build_rd_table", "rd_grid", "rd_table_from_json",
+    "rd_table_to_json",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
     "RequestRecord", "Telemetry", "jain_fairness",
 ]

@@ -3,18 +3,32 @@
 Turns the single-shot :class:`repro.core.split.SplitInferenceEngine` into a
 service loop over many concurrent requests (paper Fig. 1 at serving scale):
 
-    edge forward -> rate control picks (C, bits) -> encode -> simulated
-    channel -> decode -> micro-batch -> jitted BaF restore (+ fused Pallas
-    consolidation) -> cloud forward -> respond, with per-request telemetry.
+    edge forward -> rate control picks an OperatingPoint -> negotiate against
+    gateway capabilities -> plan.encode -> simulated channel -> micro-batch
+    (wire blobs) -> plan.decode_batch (vectorized host decode) -> jitted BaF
+    restore (+ fused Pallas consolidation) -> cloud forward -> respond, with
+    per-request telemetry.
+
+All coding state flows through :mod:`repro.pipeline`: the rate controller
+hands back an :class:`OperatingPoint`, the gateway compiles (cached) one
+:class:`CompressionPlan` per point against its per-C model specs, and every
+stage reads configuration from the plan — no loose ``(C, bits, backend)``
+tuples.
 
 Design points:
   * the rate controller (serve/rate_control.py) consults the channel's
     remaining bit budget per request, so operating points adapt to congestion;
+  * ``capabilities`` (repro.pipeline.Capabilities) lets a gateway refuse — or
+    downgrade — operating points whose wire profile or backend it does not
+    speak, *before* any bytes are encoded;
   * each C has its own BaF predictor (its input width is C) — the gateway
-    holds a bank ``{c: (baf_params, sel_idx)}``;
-  * the micro-batcher (serve/batcher.py) pads groups with equal
-    ``(C, bits, H, W)`` to power-of-two batch sizes so the restore + cloud
-    forward jit-compile once per bucket, never per request;
+    holds a bank ``{c: (baf_params, sel_idx)}`` compiled into per-C
+    ``ModelSpec``s;
+  * the micro-batcher (serve/batcher.py) buckets *encoded* requests by
+    ``(operating point, H, W)``; decode runs once per micro-batch through
+    ``plan.decode_batch`` — the per-channel host numpy loops coalesce across
+    the whole bucket — and the restore + cloud forward jit-compile once per
+    bucket, never per request;
   * transport timing is simulated (deterministic virtual clock), compute
     timing is measured — telemetry keeps the two separate.
 """
@@ -26,17 +40,14 @@ import time
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codec as wire
-from repro.core.split import (SplitStats, _jitted_cnn_fns, activation_stats,
-                              decode_stream, encode_activation, restore_codes,
-                              restore_codes_fused)
-from repro.serve.batcher import DecodedRequest, MicroBatch, MicroBatcher
+from repro import pipeline
+from repro.core.split import SplitStats, _jitted_cnn_fns, activation_stats
+from repro.pipeline import Capabilities, ModelSpec, OperatingPoint, negotiate
+from repro.serve.batcher import EncodedRequest, MicroBatch, MicroBatcher
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
-from repro.serve.rate_control import (ContentKeyedController, OperatingPoint,
-                                      RateController)
+from repro.serve.rate_control import ContentKeyedController, RateController
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
 from repro.serve.telemetry import RequestRecord, Telemetry
@@ -60,6 +71,11 @@ class ServingGateway:
     channel : SimulatedChannel or None (None = ideal wire, zero latency)
     controller : RateController or None (None = fixed ``default_op``)
     default_op : operating point used when no controller is given
+    backend : legacy override — when set, every selected operating point is
+              re-based onto this entropy backend (None = respect the point's
+              own backend, the plan-API default)
+    capabilities : what this gateway speaks; selected operating points are
+              negotiated against it (refuse or downgrade) before encoding
     max_batch : micro-batch cap (1 = naive one-at-a-time serving)
     fused : use the Pallas fused-consolidation restore path
     """
@@ -68,22 +84,24 @@ class ServingGateway:
                  channel: SimulatedChannel | None = None,
                  controller: RateController | None = None,
                  default_op: OperatingPoint | None = None,
-                 backend: str = "zlib", max_batch: int = 8,
-                 fused: bool = True):
+                 backend: str | None = None, max_batch: int = 8,
+                 fused: bool = True,
+                 capabilities: Capabilities | None = None):
         if not baf_bank:
             raise ValueError("empty BaF bank")
         self.params = params
-        self.baf_bank = {int(c): (p, jnp.asarray(np.asarray(s), jnp.int32))
+        self.baf_bank = {int(c): (p, np.asarray(s))
                          for c, (p, s) in baf_bank.items()}
+        self._specs = {c: ModelSpec(sel_idx=s, params=params, baf_params=p)
+                       for c, (p, s) in self.baf_bank.items()}
         self.channel = channel
         self.controller = controller
+        self.backend = backend
+        self.capabilities = capabilities
         if default_op is None:
             c = max(self.baf_bank)
             default_op = OperatingPoint(c=c, bits=8)
-        if default_op.c not in self.baf_bank:
-            raise ValueError(f"no BaF predictor for C={default_op.c}")
-        self.default_op = default_op
-        self.backend = backend
+        self.default_op = self._fit_op(default_op)
         self.max_batch = max_batch
         self.fused = fused
         # process-wide jitted CNN halves (core.split caches them): gateways
@@ -91,55 +109,60 @@ class ServingGateway:
         # benchmarks and tests does not recompile per instance
         self._edge_fn, self._cloud_fn = _jitted_cnn_fns()
 
+    # -- plans --------------------------------------------------------------
+    def _fit_op(self, op: OperatingPoint) -> OperatingPoint:
+        """Re-base onto the legacy backend override, negotiate against the
+        gateway's capabilities, and check the BaF bank covers the C."""
+        if self.backend is not None and op.backend != self.backend:
+            op = op.with_backend(self.backend)
+        op = negotiate(op, self.capabilities)
+        if op.c not in self.baf_bank:
+            raise ValueError(f"operating point picked C={op.c} with no BaF "
+                             f"predictor in the bank {sorted(self.baf_bank)}")
+        return op
+
+    def plan_for(self, op: OperatingPoint) -> pipeline.CompressionPlan:
+        """The (cached) compression plan this gateway executes for ``op``."""
+        return pipeline.compile(op, self._specs[op.c], fused=self.fused)
+
     # -- edge side ----------------------------------------------------------
     def _pick_op(self, t_submit: float) -> OperatingPoint:
         if self.controller is None:
             return self.default_op
         budget = (self.channel.budget_remaining(at=t_submit)
                   if self.channel is not None else None)
-        rd = self.controller.select(budget)
-        if rd.op.c not in self.baf_bank:
-            raise ValueError(f"RD table picked C={rd.op.c} with no BaF "
-                             f"predictor in the bank {sorted(self.baf_bank)}")
-        return rd.op
+        return self._fit_op(self.controller.select(budget).op)
 
     def encode_request(self, img, t_submit: float = 0.0):
         """Edge-side work for one request: rate control + encode + transmit.
 
-        img: (1, H, W, 3). Returns (op, wire blob, SplitStats, Transmission).
+        img: (1, H, W, 3). Returns (op, WireBlob, SplitStats, Transmission).
         The blob is serialized here — the channel meters its true byte
         length (container header + side info + entropy-coded payload).
         """
         op = self._pick_op(t_submit)
-        _, sel_idx = self.baf_bank[op.c]
+        plan = self.plan_for(op)
         z = self._edge_fn(self.params, img)
-        enc, stats = encode_activation(z, sel_idx, op.bits,
-                                       backend=self.backend)
-        blob = enc.to_bytes()
+        blob = plan.encode(z)
         if self.channel is not None:
-            tx = self.channel.transmit_bytes(blob, t_submit)
+            tx = self.channel.transmit_bytes(blob.data, t_submit)
         else:
-            tx = Transmission(bits=8 * len(blob), t_submit=t_submit,
+            tx = Transmission(bits=8 * blob.nbytes, t_submit=t_submit,
                               t_start=t_submit, t_arrive=t_submit)
-        return op, blob, stats, tx
+        return op, blob, blob.stats, tx
 
     # -- cloud side ---------------------------------------------------------
-    def _restore(self, key, codes, mins, maxs):
-        baf_params, sel_idx = self.baf_bank[key.c]
-        if self.fused:
-            return restore_codes_fused(baf_params, self.params["split"],
-                                       sel_idx, codes, mins, maxs,
-                                       bits=key.bits)
-        return restore_codes(baf_params, self.params["split"], sel_idx,
-                             codes, mins, maxs, bits=key.bits,
-                             consolidation=True)
-
     def _run_batch(self, batch: MicroBatch) -> tuple[np.ndarray, float]:
-        """Restore + cloud forward for one micro-batch; measured wall time."""
+        """Batched decode + restore + cloud forward; measured wall time.
+
+        The host decode is part of the cloud side's measured compute now —
+        it runs once per micro-batch (plan.decode_batch), not once per
+        request on arrival.
+        """
+        plan = self.plan_for(batch.key.op)
         t0 = time.perf_counter()
-        z_tilde = self._restore(batch.key, jnp.asarray(batch.codes),
-                                jnp.asarray(batch.mins),
-                                jnp.asarray(batch.maxs))
+        decoded = plan.decode_batch([r.blob for r in batch.requests])
+        z_tilde = plan.restore(decoded.pad_to(batch.padded_size))
         logits = self._cloud_fn(self.params, z_tilde)
         logits = np.asarray(jax.block_until_ready(logits))
         return logits, time.perf_counter() - t0
@@ -181,18 +204,15 @@ class ServingGateway:
             op, blob, stats, tx = self.encode_request(imgs[i:i + 1],
                                                       float(submit_times[i]))
             inflight.append((i, op, blob, stats, tx))
-        # 2. cloud side: decode in arrival order, micro-batch, restore, respond
+        # 2. cloud side: micro-batch encoded blobs in arrival order; decode
+        # runs batched per bucket inside _run_batch
         inflight.sort(key=lambda item: (item[4].t_arrive, item[0]))
         responses: list[GatewayResponse | None] = [None] * n
         telemetry = Telemetry()
         batcher = MicroBatcher(max_batch=self.max_batch)
         for i, op, blob, stats, tx in inflight:
-            codes, mins, maxs = decode_stream(
-                wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
-            req = DecodedRequest(
-                req_id=i, codes=np.asarray(codes), mins=np.asarray(mins),
-                maxs=np.asarray(maxs), c=op.c, bits=op.bits,
-                t_arrive=tx.t_arrive, meta=(op, stats, tx))
+            req = EncodedRequest(req_id=i, blob=blob, t_arrive=tx.t_arrive,
+                                 meta=(op, stats, tx))
             for full in batcher.add(req):
                 self._process_batch(full, responses, telemetry)
         for rest in batcher.flush():
@@ -216,23 +236,30 @@ class TenantRequest:
 class MultiTenantGateway(ServingGateway):
     """Event-driven serving over N tenants sharing one uplink bit budget.
 
-    Replaces :meth:`ServingGateway.serve`'s strict decode -> batch -> restore
+    Replaces :meth:`ServingGateway.serve`'s strict encode -> batch -> restore
     phases with a virtual-clock event loop where edge submits, uplink drain
     ticks, channel arrivals, batch-window flushes, and cloud-compute
     completions interleave:
 
-        submit  : edge forward + content-keyed rate control + encode;
-                  the encoded job queues at the DRR scheduler
+        submit  : edge forward + content-keyed rate control + capability
+                  negotiation + plan.encode; the encoded job queues at the
+                  DRR scheduler
         drain   : the scheduler grants queued jobs against the shared
                   per-tick budget (weighted DRR, starvation-free); granted
                   jobs enter their tenant's own channel
-        arrive  : wire decode, then into the micro-batcher — buckets are
-                  keyed (C, bits, H, W) only, so tenants share buckets and
-                  restore compiles stay bounded under heterogeneous traffic
-        flush   : a partially-filled bucket hits its batch window
-        done    : restore + cloud forward finished (the cloud is modeled as
-                  a serial executor on the virtual clock; compute durations
-                  are measured wall time, as in single-tenant serving)
+        arrive  : the wire blob goes straight into the micro-batcher —
+                  buckets are keyed (operating point, H, W) only, so tenants
+                  share buckets and decode/restore compiles stay bounded
+                  under heterogeneous traffic (decode itself is deferred to
+                  dispatch and runs batched)
+        flush   : a partially-filled bucket hits its batch window; with
+                  ``adaptive_window=True`` the window follows the bucket's
+                  arrival-rate EWMA (burst-aware: bursts flush near-full
+                  buckets fast, sparse traffic stops waiting for stragglers
+                  that are not coming)
+        done    : batched decode + restore + cloud forward finished (the
+                  cloud is modeled as a serial executor on the virtual
+                  clock; compute durations are measured wall time)
 
     Per-tenant channels must be unmetered — the *shared* budget lives in the
     scheduler; a per-channel budget would meter the same bits twice.
@@ -246,14 +273,18 @@ class MultiTenantGateway(ServingGateway):
                  channels: dict[str, SimulatedChannel] | None = None,
                  controller: RateController | None = None,
                  default_op: OperatingPoint | None = None,
-                 backend: str = "zlib", max_batch: int = 8,
+                 backend: str | None = None, max_batch: int = 8,
                  fused: bool = True,
+                 capabilities: Capabilities | None = None,
                  budget_bits_per_tick: int | None = None,
                  tick_s: float = 1.0, quantum_bits: int | None = None,
-                 batch_window_s: float | None = 0.02, seed: int = 0):
+                 batch_window_s: float | None = 0.02,
+                 adaptive_window: bool = False,
+                 min_window_s: float = 0.0, seed: int = 0):
         super().__init__(params, baf_bank, channel=None, controller=None,
                          default_op=default_op, backend=backend,
-                         max_batch=max_batch, fused=fused)
+                         max_batch=max_batch, fused=fused,
+                         capabilities=capabilities)
         specs = list(tenants)
         if not specs:
             raise ValueError("need at least one tenant")
@@ -281,6 +312,8 @@ class MultiTenantGateway(ServingGateway):
         self._sched_args = dict(budget_bits_per_tick=budget_bits_per_tick,
                                 tick_s=tick_s, quantum_bits=quantum_bits)
         self.batch_window_s = batch_window_s
+        self.adaptive_window = adaptive_window
+        self.min_window_s = min_window_s
 
     # -- edge side ----------------------------------------------------------
     def _pick_tenant_op(self, spec: TenantSpec, z, budget: float):
@@ -294,10 +327,7 @@ class MultiTenantGateway(ServingGateway):
             rd = ctrl.select_for(budget, stats, spec.quality_floor_db)
         else:
             rd = ctrl.select(budget)
-        if rd.op.c not in self.baf_bank:
-            raise ValueError(f"RD table picked C={rd.op.c} with no BaF "
-                             f"predictor in the bank {sorted(self.baf_bank)}")
-        return rd.op
+        return self._fit_op(rd.op)
 
     # -- orchestration ------------------------------------------------------
     def serve_tenants(self, workload: "list[TenantRequest]") -> tuple[
@@ -314,7 +344,9 @@ class MultiTenantGateway(ServingGateway):
         self.last_scheduler = sched          # post-run introspection (tests,
         telemetry = Telemetry()              # fairness/budget audits)
         batcher = MicroBatcher(max_batch=self.max_batch,
-                               window_s=self.batch_window_s)
+                               window_s=self.batch_window_s,
+                               adaptive=self.adaptive_window,
+                               min_window_s=self.min_window_s)
         responses: dict[str, dict[int, GatewayResponse]] = {
             n: {} for n in self.specs}
         counts = {n: 0 for n in self.specs}
@@ -336,7 +368,10 @@ class MultiTenantGateway(ServingGateway):
                 drain_times.add(t)
                 push(t, "drain", None)
 
-        scheduled_flushes: set[int] = set()
+        # generation -> earliest flush time scheduled so far. Adaptive
+        # windows can move a group's deadline *earlier* as arrivals sharpen
+        # the rate estimate; re-push then (stale later events no-op via gen)
+        scheduled_flushes: dict[int, float] = {}
         cloud_busy = 0.0
 
         def dispatch(batch: MicroBatch, t_ready: float) -> None:
@@ -362,35 +397,28 @@ class MultiTenantGateway(ServingGateway):
                     img = img[None]
                 z = self._edge_fn(self.params, img)
                 op = self._pick_tenant_op(spec, z, sched.budget_remaining(t))
-                _, sel_idx = self.baf_bank[op.c]
-                enc, stats = encode_activation(z, sel_idx, op.bits,
-                                               backend=self.backend)
-                blob = enc.to_bytes()
+                blob = self.plan_for(op).encode(z)
                 # the scheduler meters the job at its true container length,
                 # so DRR shares reflect real bits on the wire
                 sched.enqueue(UplinkJob(
-                    tenant=w.tenant, req_id=local_id, bits=8 * len(blob),
-                    t_enqueue=t, payload=(op, blob, stats)))
+                    tenant=w.tenant, req_id=local_id, bits=8 * blob.nbytes,
+                    t_enqueue=t, payload=(op, blob, blob.stats)))
                 schedule_drain(t)
 
             elif kind == "drain":
                 drain_times.discard(t)
                 for job in sched.drain(t):
                     blob = job.payload[1]
-                    tx = self.channels[job.tenant].transmit_bytes(blob, t)
+                    tx = self.channels[job.tenant].transmit_bytes(blob.data, t)
                     push(tx.t_arrive, "arrive", (job, tx))
                 if sched.pending():
                     schedule_drain(sched.next_tick_time(t))
 
             elif kind == "arrive":
                 job, tx = payload
-                op, blob, stats = job.payload    # real wire round-trip
-                codes, mins, maxs = decode_stream(
-                    wire.EncodedTensor.from_bytes(blob), batch=1, c=op.c)
-                req = DecodedRequest(
-                    req_id=job.req_id, codes=np.asarray(codes),
-                    mins=np.asarray(mins), maxs=np.asarray(maxs),
-                    c=op.c, bits=op.bits, t_arrive=t,
+                op, blob, stats = job.payload
+                req = EncodedRequest(
+                    req_id=job.req_id, blob=blob, t_arrive=t,
                     meta=(op, stats, tx, job), tenant=job.tenant)
                 fulls = batcher.add(req, now=t)
                 for full in fulls:
@@ -399,15 +427,27 @@ class MultiTenantGateway(ServingGateway):
                     deadline = batcher.deadline(req.key)
                     if deadline is not None:
                         due, gen = deadline
-                        if gen not in scheduled_flushes:
-                            scheduled_flushes.add(gen)
+                        if due < scheduled_flushes.get(gen, float("inf")):
+                            scheduled_flushes[gen] = due
                             push(due, "flush", (req.key, gen))
 
             elif kind == "flush":
                 key, gen = payload
-                batch = batcher.take(key, gen)
-                if batch is not None:
-                    dispatch(batch, t)
+                current = batcher.deadline(key)
+                if (current is not None and current[1] == gen
+                        and current[0] > t + 1e-12):
+                    # the adaptive estimate drifted *later* (traffic
+                    # decelerated after this event was scheduled): chase the
+                    # new due time instead of flushing undersized. Each
+                    # re-push is strictly later and the deadline is capped
+                    # at t_first + window_s, so the chase terminates.
+                    scheduled_flushes[gen] = current[0]
+                    push(current[0], "flush", (key, gen))
+                else:
+                    batch = batcher.take(key, gen)
+                    if batch is not None:
+                        scheduled_flushes.pop(gen, None)
+                        dispatch(batch, t)
 
             elif kind == "done":
                 batch, logits, start, compute_s = payload

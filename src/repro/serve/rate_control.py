@@ -27,11 +27,10 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
-
-@dataclass(frozen=True)
-class OperatingPoint:
-    c: int          # transmitted channels (power of two; tiling constraint)
-    bits: int       # quantizer depth n
+# OperatingPoint is owned by the pipeline package now (it grew backend /
+# tiling / context / wire-profile fields); re-exported here so serve-side
+# callers keep importing it from repro.serve.
+from repro.pipeline import OperatingPoint
 
 
 @dataclass(frozen=True)
@@ -143,46 +142,70 @@ class ContentKeyedController(RateController):
         return max(pool, key=lambda p: (est[id(p)], -p.bits_per_example))
 
 
+def rd_grid(baf_bank: dict, bits_sweep=(2, 4, 6, 8),
+            backend: str = "zlib") -> list[OperatingPoint]:
+    """The default calibration grid: every bank C crossed with the bit sweep
+    on one backend. This list is also the RD cache's identity — see
+    :func:`load_or_build_rd_table`."""
+    return [OperatingPoint(c=c, bits=bits, backend=backend)
+            for c in sorted(baf_bank) for bits in bits_sweep]
+
+
 def build_rd_table(params, baf_bank: dict, imgs, *,
                    bits_sweep=(2, 4, 6, 8), backend: str = "zlib",
-                   consolidation: bool = True) -> list[RDPoint]:
-    """Offline (C, bits) sweep with the repo's own fidelity metrics.
+                   consolidation: bool = True,
+                   ops: "list[OperatingPoint] | None" = None) -> list[RDPoint]:
+    """Offline operating-point sweep with the repo's own fidelity metrics.
 
     params   : CNN params (models/cnn.py)
     baf_bank : {c: (baf_params, sel_idx)} — one trained BaF predictor per C
                (the BaF net's input width is C, so each C needs its own)
     imgs     : (B, H, W, 3) calibration batch the costs/metrics are measured on
+    ops      : explicit grid of operating points; default
+               ``rd_grid(baf_bank, bits_sweep, backend)``
+
+    Each point's wire cost is measured by compiling its
+    :class:`repro.pipeline.CompressionPlan` and encoding every calibration
+    example through it — the same code path deployment runs.
     """
-    from repro.core.split import (activation_stats, encode_activation,
-                                  fidelity_metrics)
+    from repro import pipeline
+    from repro.core.split import activation_stats, fidelity_metrics
     from repro.models.cnn import cnn_edge
 
+    if ops is None:
+        ops = rd_grid(baf_bank, bits_sweep, backend)
     edge = jax.jit(lambda p, i: cnn_edge(p, i)[1])
     z = edge(params, imgs)
-    table = []
+    specs, anchors = {}, {}
     for c, (baf_params, sel_idx) in sorted(baf_bank.items()):
+        specs[c] = pipeline.ModelSpec(sel_idx=np.asarray(sel_idx),
+                                      params=params, baf_params=baf_params)
         # per-example anchors, averaged: deployment sees single requests
         per_ex = [activation_stats(z[i:i + 1], sel_idx)
                   for i in range(imgs.shape[0])]
-        calib_peak = float(np.mean([s.peak for s in per_ex]))
-        calib_range = float(np.mean([s.dyn_range for s in per_ex]))
-        for bits in bits_sweep:
-            # cost at deployment granularity: the gateway transmits one image
-            # per request, and a shared stream over the whole batch would
-            # understate that — encode each example alone and average the
-            # *actual* container lengths (not a bits*count estimate)
-            per_req_bits = [
-                encode_activation(z[i:i + 1], sel_idx, bits,
-                                  backend=backend)[1].wire_bits
-                for i in range(imgs.shape[0])]
-            psnr, kl = fidelity_metrics(params, baf_params, sel_idx, imgs,
-                                        bits=bits, consolidation=consolidation,
-                                        z=z)
-            table.append(RDPoint(
-                op=OperatingPoint(c=c, bits=bits),
-                bits_per_example=float(np.mean(per_req_bits)),
-                psnr_db=float(psnr), kl=float(kl),
-                calib_peak=calib_peak, calib_range=calib_range))
+        anchors[c] = (float(np.mean([s.peak for s in per_ex])),
+                      float(np.mean([s.dyn_range for s in per_ex])))
+    table = []
+    for op in ops:
+        if op.c not in baf_bank:
+            raise ValueError(f"operating point wants C={op.c} but the bank "
+                             f"holds {sorted(baf_bank)}")
+        plan = pipeline.compile(op, specs[op.c], consolidation=consolidation)
+        baf_params, sel_idx = baf_bank[op.c]
+        # cost at deployment granularity: the gateway transmits one image
+        # per request, and a shared stream over the whole batch would
+        # understate that — encode each example alone and average the
+        # *actual* container lengths (not a bits*count estimate)
+        per_req_bits = [plan.encode(z[i:i + 1]).stats.wire_bits
+                        for i in range(imgs.shape[0])]
+        psnr, kl = fidelity_metrics(params, baf_params, sel_idx, imgs,
+                                    bits=op.bits, consolidation=consolidation,
+                                    z=z)
+        calib_peak, calib_range = anchors[op.c]
+        table.append(RDPoint(
+            op=op, bits_per_example=float(np.mean(per_req_bits)),
+            psnr_db=float(psnr), kl=float(kl),
+            calib_peak=calib_peak, calib_range=calib_range))
     return table
 
 
@@ -190,15 +213,31 @@ def build_rd_table(params, baf_bank: dict, imgs, *,
 # RD-table disk cache (benchmark / CI time budget)
 # ---------------------------------------------------------------------------
 
+def op_to_json(op: OperatingPoint) -> dict:
+    return {"c": op.c, "bits": op.bits, "backend": op.backend,
+            "tiling": op.tiling, "context": op.context,
+            "profile": op.profile}
+
+
+def op_from_json(r: dict) -> OperatingPoint:
+    from repro.pipeline import WIRE_PROFILE_VERSION
+    return OperatingPoint(c=int(r["c"]), bits=int(r["bits"]),
+                          backend=str(r.get("backend", "zlib")),
+                          tiling=str(r.get("tiling", "auto")),
+                          context=str(r.get("context", "auto")),
+                          profile=int(r.get("profile",
+                                            WIRE_PROFILE_VERSION)))
+
+
 def rd_table_to_json(table: list[RDPoint]) -> list[dict]:
-    return [{"c": p.op.c, "bits": p.op.bits,
+    return [{**op_to_json(p.op),
              "bits_per_example": p.bits_per_example, "psnr_db": p.psnr_db,
              "kl": p.kl, "calib_peak": p.calib_peak,
              "calib_range": p.calib_range} for p in table]
 
 
 def rd_table_from_json(rows: list[dict]) -> list[RDPoint]:
-    return [RDPoint(op=OperatingPoint(c=int(r["c"]), bits=int(r["bits"])),
+    return [RDPoint(op=op_from_json(r),
                     bits_per_example=float(r["bits_per_example"]),
                     psnr_db=float(r["psnr_db"]), kl=float(r["kl"]),
                     calib_peak=float(r.get("calib_peak", math.nan)),
@@ -206,31 +245,64 @@ def rd_table_from_json(rows: list[dict]) -> list[RDPoint]:
             for r in rows]
 
 
-def load_or_build_rd_table(cache_path, key: dict, build) -> list[RDPoint]:
-    """RD sweeps re-encode every calibration example at every (C, bits) —
-    too slow to redo per CI run now that the rANS backends are in the sweep.
-    Cache the table to disk keyed by the sweep's inputs (backend, seed, …);
-    any key mismatch rebuilds and rewrites.
+def codec_revision() -> str:
+    """Identity of the wire format the repo currently emits: container magic,
+    rANS container version, and the pipeline wire profile. Any coder change
+    that moves container bytes bumps one of these, so RD caches keyed on it
+    can never serve stale costs."""
+    from repro.codec.container import VERSION as rans_version
+    from repro.core.codec import MAGIC as wire_magic
+    from repro.pipeline import WIRE_PROFILE_VERSION
+    return (f"{wire_magic.decode('ascii')}/rtc{rans_version}"
+            f"/wp{WIRE_PROFILE_VERSION}")
+
+
+def load_or_build_rd_table(cache_path, key: dict | None = None, build=None, *,
+                           ops: "list[OperatingPoint] | None" = None
+                           ) -> list[RDPoint]:
+    """RD sweeps re-encode every calibration example at every operating
+    point — too slow to redo per CI run now that the rANS backends are in
+    the sweep. Cache the table to disk keyed by the sweep's identity.
+
+    The effective cache key is ``key`` (caller-provided sweep inputs such as
+    the calibration seed/shape) augmented with:
+
+      * the full ``ops`` grid (every field of every operating point) when
+        given — a sweep over different backends, bit depths, tilings, or
+        wire profiles can never alias a cached table, and
+      * :func:`codec_revision` — container-format changes invalidate every
+        cached table automatically (pre-plan caches keyed on backend+seed
+        only are treated as stale and rebuilt in place).
 
     cache_path : JSON file (conventionally ``benchmarks/rd_cache_*.json``)
-    key        : JSON-serializable dict identifying the sweep inputs
+    key        : JSON-serializable dict of extra sweep inputs (seed, calib …)
     build      : zero-arg callable returning the table on cache miss
+    ops        : the operating-point grid the build sweeps
     """
     import json
     import os
+
+    if build is None:
+        raise TypeError("load_or_build_rd_table needs a build callable "
+                        "(the keyword-style signature makes it optional "
+                        "syntactically, never semantically)")
+    full_key = dict(key or {})
+    if ops is not None:
+        full_key["ops"] = [op_to_json(p) for p in ops]
+    full_key["codec_rev"] = codec_revision()
 
     cache_path = os.fspath(cache_path)
     try:
         with open(cache_path) as f:
             data = json.load(f)
-        if data.get("key") == key:
+        if data.get("key") == full_key:
             return rd_table_from_json(data["points"])
     except (OSError, ValueError, KeyError, AttributeError, TypeError):
         pass                         # any unusable cache file -> rebuild
     table = build()
     tmp = cache_path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({"key": key, "points": rd_table_to_json(table)}, f,
+        json.dump({"key": full_key, "points": rd_table_to_json(table)}, f,
                   indent=1)
     os.replace(tmp, cache_path)
     return table

@@ -7,9 +7,11 @@ from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.core.baf import BaFConvConfig, init_baf_conv
 from repro.data.synthetic import shapes_batch_iterator
 from repro.models.cnn import init_cnn
-from repro.serve import (ChannelConfig, DecodedRequest, MicroBatcher,
+from repro.serve import (Capabilities, ChannelConfig, DecodedRequest,
+                         MicroBatcher, MultiTenantGateway, NegotiationError,
                          OperatingPoint, RateController, RDPoint,
-                         ServingGateway, SimulatedChannel, bucket_sizes)
+                         ServingGateway, SimulatedChannel, TenantRequest,
+                         TenantSpec, bucket_sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +181,86 @@ def test_batcher_preserves_request_identity_under_shuffled_arrival(rng):
 
 
 # ---------------------------------------------------------------------------
+# Burst-aware batch windows (EWMA of per-bucket arrival rate)
+# ---------------------------------------------------------------------------
+
+def _feed(mb, n, gap, start=0.0):
+    """Feed n same-bucket requests spaced ``gap`` apart; returns the open
+    group's effective window (deadline - first arrival)."""
+    t = start
+    for i in range(n):
+        mb.add(_req(i), now=t)
+        t += gap
+    key = _req(0).key
+    due, _gen = mb.deadline(key)
+    t_first, _ = mb._opened[key]
+    return due - t_first
+
+
+def test_adaptive_window_shrinks_for_bursty_traffic():
+    fixed = 0.1
+    bursty = MicroBatcher(max_batch=8, window_s=fixed, adaptive=True,
+                          min_window_s=0.002)
+    steady = MicroBatcher(max_batch=8, window_s=fixed, adaptive=True,
+                          min_window_s=0.002)
+    w_bursty = _feed(bursty, 3, gap=0.001)
+    w_steady = _feed(steady, 3, gap=0.05)
+    # burst: the remaining 5 slots are expected within ~5 ms, so the group
+    # does not camp on the full 100 ms window
+    assert w_bursty < w_steady
+    assert w_bursty < fixed / 2
+    # sparse-but-steady traffic can never exceed the configured cap
+    assert w_steady <= fixed
+    assert w_bursty >= 0.002
+
+
+def test_adaptive_window_tracks_rate_changes_across_groups():
+    mb = MicroBatcher(max_batch=8, window_s=1.0, adaptive=True)
+    # slow phase: EWMA learns a 0.2 s gap
+    w_slow = _feed(mb, 5, gap=0.2)
+    mb.flush()
+    # fast phase reuses the key's EWMA state and sharpens it downward; the
+    # long idle stretch in between is clamped to the window cap, so it
+    # cannot swamp the estimate
+    w_fast = _feed(mb, 5, gap=0.001, start=10.0)
+    assert w_fast < w_slow
+
+
+def test_adaptive_window_deadline_can_drift_later_within_cap():
+    """When traffic decelerates mid-group the deadline moves later (same
+    generation) up to the window cap — the gateway re-pushes its flush event
+    rather than flushing undersized."""
+    mb = MicroBatcher(max_batch=8, window_s=1.0, adaptive=True)
+    key = _req(0).key
+    # fast opener: two arrivals 1 ms apart -> short expected fill time
+    mb.add(_req(0), now=0.0)
+    mb.add(_req(1), now=0.001)
+    due_fast, gen = mb.deadline(key)
+    # then the stream decelerates: 0.1 s gaps dominate the EWMA
+    mb.add(_req(2), now=0.101)
+    mb.add(_req(3), now=0.201)
+    due_slow, gen2 = mb.deadline(key)
+    assert gen2 == gen                     # same group, same generation
+    assert due_slow > due_fast             # deadline drifted later
+    t_first, _ = mb._opened[key]
+    assert due_slow <= t_first + 1.0       # never past the hard cap
+
+
+def test_adaptive_window_needs_cap_and_first_group_uses_it():
+    with pytest.raises(ValueError, match="window_s"):
+        MicroBatcher(max_batch=4, adaptive=True)
+    mb = MicroBatcher(max_batch=4, window_s=0.05, adaptive=True)
+    mb.add(_req(0), now=0.0)                   # no gap observed yet
+    due, _ = mb.deadline(_req(0).key)
+    assert due == pytest.approx(0.05)          # falls back to the fixed cap
+
+
+def test_fixed_window_behaviour_unchanged():
+    mb = MicroBatcher(max_batch=8, window_s=0.1)
+    assert _feed(mb, 3, gap=0.001) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
 # Gateway end to end (tiny system)
 # ---------------------------------------------------------------------------
 
@@ -285,6 +367,63 @@ def test_gateway_rans_backend_matches_zlib_logits(tiny_bank, backend):
         np.testing.assert_allclose(a.logits, b.logits, atol=1e-5, rtol=1e-5)
 
 
+def test_gateway_downgrades_unsupported_backend(tiny_bank):
+    """A gateway that only speaks zlib re-bases a rans operating point onto
+    zlib at negotiation time — before any bytes are encoded."""
+    params, bank, imgs = tiny_bank
+    gw = ServingGateway(
+        params, bank,
+        default_op=OperatingPoint(c=8, bits=8, backend="rans"),
+        capabilities=Capabilities(backends=("zlib",)), max_batch=2)
+    responses, _ = gw.serve(imgs[:2])
+    assert responses[0].op.wire_backend == "zlib"
+    # and the served logits still match an all-zlib gateway bit-for-bit
+    ref = ServingGateway(params, bank,
+                         default_op=OperatingPoint(c=8, bits=8), max_batch=2)
+    r_ref, _ = ref.serve(imgs[:2])
+    for a, b in zip(responses, r_ref):
+        np.testing.assert_allclose(a.logits, b.logits, atol=1e-5, rtol=1e-5)
+
+
+def test_gateway_refuses_without_downgrade(tiny_bank):
+    params, bank, imgs = tiny_bank
+    with pytest.raises(NegotiationError):
+        ServingGateway(
+            params, bank,
+            default_op=OperatingPoint(c=8, bits=8, backend="rans"),
+            capabilities=Capabilities(backends=("zlib",), downgrade=False))
+    with pytest.raises(NegotiationError, match="profile"):
+        ServingGateway(params, bank,
+                       default_op=OperatingPoint(c=8, bits=8, profile=1),
+                       capabilities=Capabilities())
+
+
+def test_multi_tenant_adaptive_window_serves_bursts(tiny_bank):
+    """Burst-aware windows must not drop or reorder anything; a bursty
+    workload under adaptive windows serves bit-identically to fixed."""
+    params, bank, imgs = tiny_bank
+
+    def make(adaptive):
+        return MultiTenantGateway(
+            params, bank, tenants=[TenantSpec("a"), TenantSpec("b")],
+            channel_cfg=ChannelConfig(bandwidth_bps=20e6,
+                                      base_latency_s=0.002),
+            default_op=OperatingPoint(c=8, bits=8), max_batch=4,
+            tick_s=0.01, batch_window_s=0.05, adaptive_window=adaptive)
+
+    # two bursts then a straggler
+    work = [TenantRequest("ab"[i % 2], imgs[i % len(imgs)],
+                          t_submit=0.0005 * i) for i in range(6)]
+    work += [TenantRequest("a", imgs[0], t_submit=2.0)]
+    r_ad, tel_ad = make(True).serve_tenants(work)
+    r_fx, _ = make(False).serve_tenants(work)
+    assert len(r_ad["a"]) == 4 and len(r_ad["b"]) == 3
+    for t in ("a", "b"):
+        for x, y in zip(r_ad[t], r_fx[t]):
+            np.testing.assert_allclose(x.logits, y.logits,
+                                       atol=1e-5, rtol=1e-5)
+
+
 def test_gateway_meters_actual_container_bytes(tiny_bank):
     """Channel occupancy and telemetry must reflect the serialized container
     length exactly — not the payload+side-info estimate."""
@@ -293,7 +432,7 @@ def test_gateway_meters_actual_container_bytes(tiny_bank):
     gw = ServingGateway(params, bank, default_op=OperatingPoint(c=8, bits=8),
                         channel=ch, max_batch=4, backend="rans")
     op, blob, stats, tx = gw.encode_request(imgs[:1], 0.0)
-    assert tx.bits == 8 * len(blob) == stats.wire_bits
+    assert tx.bits == 8 * blob.nbytes == stats.wire_bits
     assert stats.wire_bits > stats.total_bits      # header is on the wire too
     _, tel = gw.serve(imgs[:4])
     for rec in tel.records:

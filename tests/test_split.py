@@ -40,8 +40,9 @@ def test_wire_roundtrip_is_exact(tiny_system):
     """Codes that leave encode() arrive bit-identical after to/from_bytes."""
     _, params, baf, sel, img = tiny_system
     eng = SplitInferenceEngine(params, baf, sel, bits=8)
-    enc, _ = eng.encode(img)
+    blob, _ = eng.encode(img)
     from repro.core import codec as wire
+    enc = blob.to_tensor()                     # parses blob.data (validates)
     enc2 = wire.EncodedTensor.from_bytes(enc.to_bytes())
     c1, q1 = wire.decode(enc)
     c2, q2 = wire.decode(enc2)
