@@ -29,7 +29,18 @@ checks that scheduler grants exactly equal the containers' byte lengths.
 Part 4 (batched decode, ISSUE 4) measures the plan API's vectorized host
 decode: ``plan.decode_batch`` over 8 wire blobs vs 8 ``plan.decode`` calls,
 asserting bit-identical outputs and >= 1.5x decode throughput at batch 8
-(the acceptance gate; ``--decode-only`` runs just this part for CI).
+(the acceptance gate, now for zlib AND the coalesced rANS batch decoder;
+``--decode-only`` runs just this part for CI).
+
+Part 5 (cloud executors + overload, ISSUE 5) swaps the cloud model under
+the 16-tenant workload: a ``MultiQueueExecutor`` (4 queues) vs the default
+``SerialExecutor`` on one deterministic ``LinearCostModel``, measuring
+virtual-clock cloud throughput over a deep backlog (queue depth >= 4), and
+a 2x-overload run through queue-depth admission measuring goodput of the
+admitted requests vs a no-overload solo run. Acceptance gates: multi-queue
+>= 1.8x serial throughput; goodput >= 0.9x solo; zero silent drops; and
+bit-identical telemetry when the overload run repeats (deterministic
+virtual-clock replay). ``--overload-only`` runs just this part for CI.
 
 Weights are untrained — throughput and compile behaviour do not depend on
 training. Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py
@@ -52,8 +63,10 @@ from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.core.baf import BaFConvConfig, init_baf_conv
 from repro.data.synthetic import shapes_batch_iterator
 from repro.models.cnn import init_cnn
-from repro.serve import (ChannelConfig, MultiTenantGateway, OperatingPoint,
-                         RateController, ServingGateway, SimulatedChannel,
+from repro.serve import (ChannelConfig, LinearCostModel, MultiQueueExecutor,
+                         MultiTenantGateway, OperatingPoint,
+                         QueueDepthAdmission, RateController, RequestShed,
+                         SerialExecutor, ServingGateway, SimulatedChannel,
                          TenantRequest, TenantSpec, build_rd_table,
                          load_or_build_rd_table, rd_grid)
 
@@ -292,6 +305,153 @@ def bench_decode_batch(params, bank, imgs, *, c: int, bits: int = 6,
     }
 
 
+def bench_overload(params, bank, imgs, *, c: int, n_tenants: int = 16,
+                   n_requests: int = 96, max_batch: int = 8,
+                   n_queues: int = 4):
+    """Part 5: multi-queue cloud executors + admission under overload.
+
+    All runs share one deterministic LinearCostModel, so cloud throughput
+    is a virtual-clock quantity (requests / executor makespan) that replays
+    bit-identically — the real jitted compute still runs to produce logits,
+    but its wall time never feeds the clock here.
+    """
+    op = OperatingPoint(c=c, bits=8)
+    cost = LinearCostModel(base_s=0.004, per_item_s=0.001)
+    names = [f"t{i}" for i in range(n_tenants)]
+
+    def make(executor, admission=None):
+        return MultiTenantGateway(
+            params, bank, tenants=[TenantSpec(n) for n in names],
+            channel_cfg=ChannelConfig(bandwidth_bps=50e6,
+                                      base_latency_s=0.001),
+            default_op=op, max_batch=max_batch,
+            budget_bits_per_tick=None, tick_s=0.01, batch_window_s=0.002,
+            executor=executor, admission=admission)
+
+    def workload(n, dt):
+        return [TenantRequest(names[i % n_tenants], imgs[i % len(imgs)],
+                              t_submit=dt * i) for i in range(n)]
+
+    def goodput(gw, tel):
+        hist = gw.executor.history
+        span = max(t.t_done for t in hist) - min(t.t_submit for t in hist)
+        return len(tel) / span
+
+    # warm every padded bucket size both executors can hit
+    warm_gw = make(SerialExecutor(cost=cost))
+    warm, t = [], 0.0
+    for burst in (1, 2, 4, 8):
+        warm += [TenantRequest(names[0], imgs[i % len(imgs)], t)
+                 for i in range(burst)]
+        t += 1.0
+    warm_gw.serve_tenants(warm)
+
+    # (a) deep backlog (offered >> capacity): virtual cloud throughput of
+    # the multi-queue executor vs the serial baseline
+    backlog = workload(n_requests, dt=0.0002)
+    stats = {}
+    for label, ex in (("serial", SerialExecutor(cost=cost)),
+                      ("multi", MultiQueueExecutor(n_queues, cost=cost))):
+        gw = make(ex)
+        _, tel = gw.serve_tenants(backlog)
+        assert len(tel) == len(backlog) and not tel.shed
+        stats[label] = {"cloud_rps_virtual": goodput(gw, tel),
+                        "max_queue_depth": ex.max_depth_seen}
+    speedup = (stats["multi"]["cloud_rps_virtual"]
+               / stats["serial"]["cloud_rps_virtual"])
+    depth_ok = min(s["max_queue_depth"] for s in stats.values()) >= 4
+
+    # (b) goodput under overload (offered ~1.8x the multi-queue cloud's
+    # measured capacity) with queue-depth admission, vs a healthy solo run
+    # at ~0.2x capacity. The solo run carries the SAME admission policy:
+    # zero sheds there proves the baseline load sits below the
+    # admission-controlled capacity (a baseline without admission could
+    # never shed, which would make the check vacuous)
+    admission_for = lambda: QueueDepthAdmission(max_depth=n_queues)  # noqa: E731
+    solo_gw = make(MultiQueueExecutor(n_queues, cost=cost),
+                   admission=admission_for())
+    _, solo_tel = solo_gw.serve_tenants(workload(n_requests, dt=0.002))
+    assert not solo_tel.shed, (
+        f"the baseline run shed {len(solo_tel.shed)} requests — it is not "
+        f"a no-overload baseline")
+    solo_goodput = goodput(solo_gw, solo_tel)
+
+    def overload_run():
+        # depth limit = one batch per queue: brown-out kicks in as soon as
+        # the cloud is saturated, which a 2x offered load guarantees
+        gw = make(MultiQueueExecutor(n_queues, cost=cost),
+                  admission=admission_for())
+        out, tel = gw.serve_tenants(workload(n_requests, dt=0.00025))
+        return gw, out, tel
+
+    gw2, out2, tel2 = overload_run()
+    served = sum(not isinstance(r, RequestShed)
+                 for rs in out2.values() for r in rs)
+    assert served + len(tel2.shed) == n_requests, "silent drop detected"
+    assert served == len(tel2)
+    over_goodput = goodput(gw2, tel2)
+    # efficiency floor: the baseline above is arrival-rate-limited, so the
+    # 0.9x-of-solo gate alone would tolerate a large goodput collapse.
+    # Admitted traffic must also flow within 25% of the saturated cloud's
+    # own throughput (part (a)'s deep-backlog measurement) — shedding costs
+    # some batch fill, but a queue-selection or admission bug serializing
+    # the cloud fails this hard. All virtual-clock quantities: the ratio
+    # is deterministic, not host noise.
+    goodput_vs_capacity = over_goodput / stats["multi"]["cloud_rps_virtual"]
+
+    # deterministic virtual-clock replay: repeat the overload run and
+    # require bit-identical telemetry (served records AND the shed series)
+    _, _, tel3 = overload_run()
+    replay_ok = (tel2.records == tel3.records and tel2.shed == tel3.shed)
+
+    return {
+        "tenants": n_tenants, "requests": n_requests, "queues": n_queues,
+        "serial_cloud_rps_virtual": stats["serial"]["cloud_rps_virtual"],
+        "multi_cloud_rps_virtual": stats["multi"]["cloud_rps_virtual"],
+        "multi_vs_serial": speedup,
+        "max_queue_depth_serial": stats["serial"]["max_queue_depth"],
+        "max_queue_depth_multi": stats["multi"]["max_queue_depth"],
+        "depth_ok": depth_ok,
+        "solo_goodput_rps": solo_goodput,
+        "overload_goodput_rps": over_goodput,
+        "goodput_vs_solo": over_goodput / solo_goodput,
+        "goodput_vs_capacity": goodput_vs_capacity,
+        "overload_shed": len(tel2.shed),
+        "overload_shed_rate": tel2.shed_rate(),
+        "zero_silent_drops": True,
+        "replay_bit_identical": replay_ok,
+    }
+
+
+def run_overload_part(params, bank, imgs, *, c: int, n_requests: int):
+    r = bench_overload(params, bank, imgs, c=c, n_requests=n_requests)
+    _row("gateway_overload", 0.0,
+         f"multi/serial={r['multi_vs_serial']:.2f}x "
+         f"(serial {r['serial_cloud_rps_virtual']:.0f} -> multi "
+         f"{r['multi_cloud_rps_virtual']:.0f} virtual rps, depth >= "
+         f"{min(r['max_queue_depth_serial'], r['max_queue_depth_multi'])}) "
+         f"goodput@2x={r['goodput_vs_solo']:.2f}x solo "
+         f"({r['goodput_vs_capacity']:.2f}x saturated capacity) "
+         f"shed={r['overload_shed']} ({100 * r['overload_shed_rate']:.0f}%) "
+         f"replay={'bit-identical' if r['replay_bit_identical'] else 'FAIL'}")
+    assert r["depth_ok"], (
+        "ACCEPTANCE FAIL: backlog never reached queue depth 4 — the "
+        "overload workload is not overloading")
+    assert r["multi_vs_serial"] >= 1.8, (
+        f"ACCEPTANCE FAIL: MultiQueueExecutor {r['multi_vs_serial']:.2f}x "
+        f"serial cloud throughput is below the 1.8x gate")
+    assert r["goodput_vs_solo"] >= 0.9, (
+        f"ACCEPTANCE FAIL: goodput under 2x offered load is "
+        f"{r['goodput_vs_solo']:.2f}x solo, below the 0.9x gate")
+    assert r["goodput_vs_capacity"] >= 0.75, (
+        f"ACCEPTANCE FAIL: admitted goodput under overload is only "
+        f"{r['goodput_vs_capacity']:.2f}x the saturated cloud throughput "
+        f"(floor 0.75x) — goodput collapsed under shedding")
+    assert r["replay_bit_identical"], (
+        "ACCEPTANCE FAIL: overload run did not replay bit-identically")
+    return r
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=None)
@@ -299,6 +459,8 @@ def main():
                     help="CI-sized run (< 60 s)")
     ap.add_argument("--decode-only", action="store_true",
                     help="run only part 4 (batched decode gate, < 60 s)")
+    ap.add_argument("--overload-only", action="store_true",
+                    help="run only part 5 (executor/overload gates, < 60 s)")
     args = ap.parse_args()
     n = args.requests or (32 if args.smoke else 96)
     c = 8
@@ -306,17 +468,24 @@ def main():
     params, bank, data_cfg = build_system(c=c)
     imgs = request_stream(data_cfg, n)
 
+    if args.overload_only:
+        run_overload_part(params, bank, imgs, c=c,
+                          n_requests=64 if args.smoke else 96)
+        print("overload gates OK")
+        return
+
     if args.decode_only:
+        # both backends carry the 1.5x gate now: zlib via unpack_bits_batch,
+        # rans via the chunk-level cross-container interleave (codec/batch.py)
         for backend in ("zlib", "rans"):
             r = bench_decode_batch(params, bank, imgs, c=c, backend=backend)
             _row(f"gateway_decode_batch_{backend}", 1e6 / r["batched_rps"],
                  f"per_req_rps={r['per_request_rps']:.0f} "
                  f"batched_rps={r['batched_rps']:.0f} "
                  f"speedup={r['speedup']:.2f}x bit_identical=True")
-            if backend == "zlib":
-                assert r["speedup"] >= 1.5, (
-                    f"ACCEPTANCE FAIL: decode_batch speedup "
-                    f"{r['speedup']:.2f}x below the 1.5x gate")
+            assert r["speedup"] >= 1.5, (
+                f"ACCEPTANCE FAIL: {backend} decode_batch speedup "
+                f"{r['speedup']:.2f}x below the 1.5x gate")
         print("decode gate OK")
         return
 
@@ -377,13 +546,19 @@ def main():
              f"per_req_rps={r['per_request_rps']:.0f} "
              f"batched_rps={r['batched_rps']:.0f} "
              f"speedup={r['speedup']:.2f}x bit_identical=True")
-    dec = results["decode_batch_zlib"]
-    assert dec["speedup"] >= 1.5, (
-        f"ACCEPTANCE FAIL: decode_batch speedup {dec['speedup']:.2f}x at "
-        f"batch {dec['batch']} is below the 1.5x gate")
-    _row("gateway_decode_gate", 0.0,
-         f"decode_batch {dec['speedup']:.2f}x >= 1.5x at batch "
-         f"{dec['batch']}: OK")
+    for backend in ("zlib", "rans"):
+        dec = results[f"decode_batch_{backend}"]
+        assert dec["speedup"] >= 1.5, (
+            f"ACCEPTANCE FAIL: {backend} decode_batch speedup "
+            f"{dec['speedup']:.2f}x at batch {dec['batch']} is below the "
+            f"1.5x gate")
+        _row(f"gateway_decode_gate_{backend}", 0.0,
+             f"decode_batch {dec['speedup']:.2f}x >= 1.5x at batch "
+             f"{dec['batch']}: OK")
+
+    # -- part 5: cloud executors + overload shedding (ISSUE 5 gates) --------
+    results["overload"] = run_overload_part(
+        params, bank, imgs, c=c, n_requests=64 if args.smoke else 96)
 
     t1, t16 = results["tenants_1"], results["tenants_16"]
     tp_ratio = t16["rps_cloud_compute"] / t1["rps_cloud_compute"]

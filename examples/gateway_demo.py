@@ -11,9 +11,14 @@
 4. set a PSNR quality floor and serve the same traffic through gateways whose
    channels grant a full and a HALVED per-tick bit budget — the controller
    moves to a cheaper operating point while staying at/above the floor,
-5. multi-tenant serving over one shared uplink, and capability negotiation:
-   a gateway that does not speak rANS downgrades the operating point to zlib
-   instead of failing on the cloud side.
+5. multi-tenant serving over one shared uplink (premium + best effort
+   through the DRR scheduler),
+6. capability negotiation: a gateway that does not speak rANS downgrades
+   the operating point to zlib instead of failing on the cloud side,
+7. overload: a 3x burst against a multi-queue cloud executor with
+   priority-tiered admission — best effort browns out first, every
+   rejection is an explicit RequestShed, and telemetry keeps the shed
+   series apart from the served-latency percentiles.
 """
 import argparse
 
@@ -23,9 +28,11 @@ from repro import pipeline
 from repro.configs.yolo_baf import smoke_config, smoke_data_config
 from repro.data.synthetic import shapes_batch_iterator
 from repro.serve import (Capabilities, ChannelConfig, ContentKeyedController,
-                         MultiTenantGateway, RateController, ServingGateway,
+                         LinearCostModel, MultiQueueExecutor,
+                         MultiTenantGateway, QueueDepthAdmission,
+                         RateController, RequestShed, ServingGateway,
                          SimulatedChannel, TenantRequest, TenantSpec,
-                         build_rd_table)
+                         build_rd_table, priority_depth_limits)
 from repro.train.baf_trainer import compute_channel_order, pretrain_cnn, train_baf
 
 ap = argparse.ArgumentParser()
@@ -157,3 +164,38 @@ try:
 except pipeline.NegotiationError as e:
     print(f"strict gateway refuses instead: {e}")
 print("OK: negotiation decided before any bytes were encoded")
+
+print("\n== 7. overload: 3x burst through priority tiers, explicit shed ==")
+# The cloud is 2 parallel queues on a deterministic cost model: capacity is
+# 2 queues * 4 req / (4 ms + 4 * 1 ms) = 1000 req/s. The burst offers 3x
+# that. Queue-depth admission holds a tier ladder — bronze sheds at
+# backlog 2, silver at 4, gold at 6 — so the brown-out eats best effort
+# first while gold keeps flowing.
+cost = LinearCostModel(base_s=0.004, per_item_s=0.001)
+tiers = [TenantSpec("gold", weight=2.0, priority=2),
+         TenantSpec("silver", priority=1),
+         TenantSpec("bronze", priority=0)]
+ov = MultiTenantGateway(
+    params, bank, tenants=tiers,
+    channel_cfg=ChannelConfig(bandwidth_bps=50e6, base_latency_s=0.001),
+    default_op=pipeline.OperatingPoint(c=8, bits=8), max_batch=4,
+    batch_window_s=0.002,
+    executor=MultiQueueExecutor(2, cost=cost),
+    admission=QueueDepthAdmission(
+        2, per_priority=priority_depth_limits(2, [0, 1, 2], headroom=2)))
+burst = [TenantRequest(("gold", "silver", "bronze")[i % 3],
+                       stream[i % len(stream)], t_submit=i / 3000.0)
+         for i in range(48)]
+ov_resp, ov_tel = ov.serve_tenants(burst)
+print(ov_tel.format_summary())
+served = {t: sum(not isinstance(r, RequestShed) for r in rs)
+          for t, rs in ov_resp.items()}
+shed = ov_tel.shed_by_tenant()
+for t in ("gold", "silver", "bronze"):
+    print(f"  {t:<7}: served {served[t]:>2}, shed {shed.get(t, 0):>2}")
+assert sum(served.values()) + len(ov_tel.shed) == len(burst), "silent drop!"
+assert shed.get("bronze", 0) >= shed.get("gold", 0)
+if ov_tel.shed:
+    print(f"example shed reason: {ov_tel.shed[0].reason!r}")
+print("OK: 3x burst browned out low tiers first; every request ended as a "
+      "response or an explicit RequestShed")

@@ -10,12 +10,16 @@ The real coder behind the wire codec's ``rans`` / ``rans-ctx`` backends
   * ``container.py`` — versioned bitstream container with per-tile chunks,
                        partial decode, and distinct corruption errors
   * ``backend.py``   — tensor-level adapters registered with core/codec.py
+  * ``batch.py``     — cross-container batched decode: chunks of a whole
+                       micro-batch share one interleaved decode loop
+                       (bit-identical to the per-blob path)
 
 Symbol statistics for static tables are computed on device by the Pallas
 histogram/CDF kernels (repro.kernels.histogram).
 """
 from repro.codec.backend import (decode_channels, decode_tensor,
                                  encode_adaptive_tensor, encode_static_tensor)
+from repro.codec.batch import decode_tensor_batch
 from repro.codec.container import RansContainer
 from repro.codec.context import decode_ctx, encode_ctx, plan_lanes
 from repro.codec.rans import (CorruptStream, RansTable, normalize_freqs,
@@ -23,7 +27,7 @@ from repro.codec.rans import (CorruptStream, RansTable, normalize_freqs,
 
 __all__ = [
     "CorruptStream", "RansContainer", "RansTable",
-    "decode_channels", "decode_ctx", "decode_tensor",
+    "decode_channels", "decode_ctx", "decode_tensor", "decode_tensor_batch",
     "encode_adaptive_tensor", "encode_ctx", "encode_static_tensor",
     "normalize_freqs", "plan_lanes", "rans_decode", "rans_encode",
 ]

@@ -165,8 +165,12 @@ class RansContainer:
     def chunk_count(self, i: int) -> int:
         return self._chunk_meta[i][0]
 
-    def decode_chunk(self, i: int) -> np.ndarray:
-        """Decode tile ``i`` alone; other chunks are never touched."""
+    def chunk_parts(self, i: int) -> tuple[int, np.ndarray, bytes]:
+        """CRC-verified raw parts of chunk ``i``: (count, lane states, words).
+
+        The shared extraction step behind :meth:`decode_chunk` and the
+        cross-container batched decoder (repro.codec.batch) — every consumer
+        gets the same integrity checks before touching a payload byte."""
         h = self.header
         count, states_off, words_len, crc = self._chunk_meta[i]
         end = states_off + 4 * h.lanes + words_len
@@ -184,6 +188,17 @@ class RansContainer:
             if not bool(np.all(states == RANS_L)):
                 raise CorruptStream(
                     f"chunk {i}: empty chunk with non-initial lane states")
+        return count, states, words
+
+    def chunk_table(self, i: int) -> np.ndarray | None:
+        """Static-mode frequency table of chunk ``i`` (None when adaptive)."""
+        return self._tables[i] if self.header.mode == MODE_STATIC else None
+
+    def decode_chunk(self, i: int) -> np.ndarray:
+        """Decode tile ``i`` alone; other chunks are never touched."""
+        h = self.header
+        count, states, words = self.chunk_parts(i)
+        if count == 0:
             return np.empty(0, np.uint32)
         if h.mode == MODE_STATIC:
             table = RansTable(freqs=self._tables[i].astype(np.uint32),

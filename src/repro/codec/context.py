@@ -76,6 +76,30 @@ def _ctx_shift(bits: int) -> int:
     return max(0, bits - CTX_BITS)
 
 
+def refresh_due(t: int, refresh_every: int) -> bool:
+    """Table-refresh schedule: exponential early (steps 1, 2, 4, 8, …) so
+    the model escapes the uniform prior quickly, then periodic. ONE source
+    of truth — the scalar model and the cross-container batch decoder
+    (repro.codec.batch) must refresh on identical steps or decode diverges
+    from encode."""
+    if t == 0:
+        return False                     # initial tables already built
+    if t < refresh_every:
+        return t & (t - 1) == 0          # powers of two
+    return t % refresh_every == 0
+
+
+def rebuild_tables(counts: np.ndarray, prob_bits: int, freqs_out: np.ndarray,
+                   cums_out: np.ndarray) -> None:
+    """Renormalize per-context counts (nctx, nsym) into frequency +
+    exclusive-cumulative tables, written in place. Shared by the scalar
+    model and the batch decoder so the adaptation math cannot fork."""
+    for cx in range(counts.shape[0]):
+        f = normalize_freqs(counts[cx], prob_bits)
+        freqs_out[cx] = f
+        cums_out[cx] = np.cumsum(f, dtype=np.uint64) - f
+
+
 class _AdaptiveModel:
     """Shared encoder/decoder adaptation state (identical on both sides)."""
 
@@ -91,19 +115,10 @@ class _AdaptiveModel:
         self.rebuild()
 
     def rebuild(self) -> None:
-        for ctx in range(self.nctx):
-            f = normalize_freqs(self.counts[ctx], self.prob_bits)
-            self.freqs[ctx] = f
-            self.cums[ctx] = (np.cumsum(f, dtype=np.uint64) - f)
+        rebuild_tables(self.counts, self.prob_bits, self.freqs, self.cums)
 
     def refresh_due(self, t: int) -> bool:
-        """Exponential early schedule (steps 1, 2, 4, 8, …) so the model
-        escapes the uniform prior quickly, then periodic."""
-        if t == 0:
-            return False                     # initial tables already built
-        if t < self.refresh_every:
-            return t & (t - 1) == 0          # powers of two
-        return t % self.refresh_every == 0
+        return refresh_due(t, self.refresh_every)
 
     def contexts(self, idx: np.ndarray, stream: np.ndarray,
                  neighbor_dist: int) -> np.ndarray:

@@ -236,17 +236,26 @@ def _register_rans_backends() -> None:
         return
     from repro.codec import (decode_tensor, encode_adaptive_tensor,
                              encode_static_tensor)
+    from repro.codec.batch import decode_tensor_batch
+
+    def _batch(payloads, shape, bits, count):
+        # chunk-level interleave across the whole batch of containers —
+        # one decode loop per coding geometry instead of one per blob
+        return decode_tensor_batch(list(payloads), shape, bits)
+
     register_backend(
         "rans", 3, tiled=False,
         encode=lambda codes, bits, level: encode_static_tensor(codes, bits),
         decode=lambda payload, shape, bits, count:
-            decode_tensor(payload, shape, bits))
+            decode_tensor(payload, shape, bits),
+        decode_batch=_batch)
     register_backend(
         "rans-ctx", 4, tiled=False,
         encode=lambda codes, bits, level:
             encode_adaptive_tensor(codes, bits),
         decode=lambda payload, shape, bits, count:
-            decode_tensor(payload, shape, bits))
+            decode_tensor(payload, shape, bits),
+        decode_batch=_batch)
 
 
 _LAZY["rans"] = _register_rans_backends

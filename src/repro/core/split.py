@@ -10,13 +10,12 @@ Coding configuration now lives in ``repro.pipeline``: build an
 ``encode`` / ``decode_batch`` / ``restore``. This module keeps the jitted
 device-side restore functions (one trace per ``(C, bits, batch-bucket)``,
 shared process-wide) plus ``SplitInferenceEngine``, the single-operating-point
-wrapper, which itself executes a plan. The old loose-tuple entry points
-``encode_activation`` / ``decode_stream`` remain as deprecation shims for one
-release — see docs/MIGRATION.md.
+wrapper, which itself executes a plan. The loose-tuple entry points
+``encode_activation`` / ``decode_stream`` served their one deprecation
+release and are gone — see docs/MIGRATION.md for the mapping.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from functools import lru_cache, partial
 
@@ -24,10 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codec as wire
 from repro.core.baf import baf_conv_predict, scatter_consolidated
 from repro.core.quant import QuantParams, compute_quant_params, dequantize, quantize
-from repro.core.tiling import untile_batch
 
 
 @dataclass(frozen=True)
@@ -69,68 +66,6 @@ class SplitStats:
     @property
     def reduction_vs_raw(self) -> float:
         return 1.0 - self.total_bits / self.raw_bits
-
-
-# ---------------------------------------------------------------------------
-# Deprecated loose-tuple entry points (one-release shims over repro.pipeline)
-# ---------------------------------------------------------------------------
-
-@lru_cache(maxsize=64)
-def _shim_spec(sel: tuple):
-    # encode/decode-only spec (no weights); cached so repeated shim calls
-    # with one channel order reuse one compiled plan
-    from repro import pipeline  # lazy: pipeline imports this module
-    return pipeline.ModelSpec(sel_idx=np.asarray(sel, np.int32))
-
-
-def _plan_for(sel_idx, bits: int, backend: str):
-    from repro import pipeline
-    sel = tuple(int(i) for i in np.asarray(sel_idx).ravel())
-    op = pipeline.OperatingPoint(c=len(sel), bits=bits, backend=backend)
-    return pipeline.compile(op, _shim_spec(sel))
-
-
-def encode_activation(z, sel_idx, bits: int, *,
-                      backend: str = "zlib") -> tuple[wire.EncodedTensor, SplitStats]:
-    """Deprecated: quantize/tile/entropy-code at one loose operating point.
-
-    Use ``repro.pipeline.compile(OperatingPoint(...), ModelSpec(...)).encode``
-    — the plan owns backend/tiling/context selection and returns a
-    ``WireBlob`` the batched decode path understands.
-    """
-    warnings.warn(
-        "encode_activation is deprecated; build a repro.pipeline."
-        "CompressionPlan and call plan.encode (docs/MIGRATION.md)",
-        DeprecationWarning, stacklevel=2)
-    blob = _plan_for(sel_idx, bits, backend).encode(z)
-    return blob.to_tensor(), blob.stats
-
-
-def decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
-    """Deprecated: wire tensor -> (codes, mins, maxs) one request at a time.
-
-    Use ``plan.decode_batch`` — it coalesces the host decode across a whole
-    micro-batch and returns a restore-ready ``DecodedBatch``.
-    """
-    warnings.warn(
-        "decode_stream is deprecated; build a repro.pipeline.CompressionPlan "
-        "and call plan.decode / plan.decode_batch (docs/MIGRATION.md)",
-        DeprecationWarning, stacklevel=2)
-    return _decode_stream(enc, batch, c)
-
-
-def _decode_stream(enc: wire.EncodedTensor, batch: int, c: int):
-    """Wire blob -> (codes (B, H, W, C), mins (B, 1, 1, C), maxs (B, 1, 1, C))."""
-    stream, qp = wire.decode(enc)
-    if wire.backend_wants_tiling(enc.backend):
-        tiled = stream.reshape(batch, -1, stream.shape[-1])
-        codes = untile_batch(jnp.asarray(tiled), c)
-    else:
-        codes = jnp.asarray(stream.reshape(batch, -1, stream.shape[-2],
-                                           stream.shape[-1]))
-    mins = jnp.asarray(qp.mins).reshape(batch, 1, 1, c)
-    maxs = jnp.asarray(qp.maxs).reshape(batch, 1, 1, c)
-    return codes, mins, maxs
 
 
 @partial(jax.jit, static_argnames=("bits", "consolidation"))

@@ -10,6 +10,14 @@ from repro.serve.batcher import (BucketKey, DecodedRequest, EncodedRequest,
                                  MicroBatch, MicroBatcher, PlanBucketKey,
                                  bucket_sizes)
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
+from repro.serve.executor import (AdmissionDecision, AdmissionPolicy,
+                                  AlwaysAdmit, CloudExecutor,
+                                  CompositeAdmission, CostModel, ExecTicket,
+                                  LinearCostModel, MeasuredCost,
+                                  MultiQueueExecutor, QueueDepthAdmission,
+                                  RequestShed, SerialExecutor,
+                                  TokenBucketAdmission,
+                                  priority_depth_limits)
 from repro.serve.gateway import (GatewayResponse, MultiTenantGateway,
                                  ServingGateway, TenantRequest)
 from repro.serve.rate_control import (ContentKeyedController,
@@ -20,18 +28,24 @@ from repro.serve.rate_control import (ContentKeyedController,
                                       rd_table_to_json)
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
-from repro.serve.telemetry import (RequestRecord, Telemetry, jain_fairness)
+from repro.serve.telemetry import (RequestRecord, ShedRecord, Telemetry,
+                                   jain_fairness)
 
 __all__ = [
     "BucketKey", "DecodedRequest", "EncodedRequest", "MicroBatch",
     "MicroBatcher", "PlanBucketKey", "bucket_sizes",
     "Capabilities", "NegotiationError",
     "ChannelConfig", "SimulatedChannel", "Transmission",
+    "AdmissionDecision", "AdmissionPolicy", "AlwaysAdmit", "CloudExecutor",
+    "CompositeAdmission", "CostModel", "ExecTicket", "LinearCostModel",
+    "MeasuredCost", "MultiQueueExecutor", "QueueDepthAdmission",
+    "RequestShed", "SerialExecutor", "TokenBucketAdmission",
+    "priority_depth_limits",
     "GatewayResponse", "MultiTenantGateway", "ServingGateway",
     "TenantRequest", "ContentKeyedController", "OperatingPoint",
     "RateController", "RDPoint", "build_rd_table", "codec_revision",
     "load_or_build_rd_table", "rd_grid", "rd_table_from_json",
     "rd_table_to_json",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
-    "RequestRecord", "Telemetry", "jain_fairness",
+    "RequestRecord", "ShedRecord", "Telemetry", "jain_fairness",
 ]

@@ -19,9 +19,8 @@ Two request currencies are supported:
   * :class:`EncodedRequest` — the plan-API path: the bucket holds *encoded*
     wire blobs keyed by ``(operating point, H, W)`` and the gateway decodes
     the whole bucket in one ``plan.decode_batch`` call at dispatch time;
-  * :class:`DecodedRequest` — the legacy per-request-decoded path (kept for
-    one release alongside the ``decode_stream`` shim); arrays are stacked
-    and padded here.
+  * :class:`DecodedRequest` — the already-decoded currency (arrays stacked
+    and padded here) for callers that decode upstream of the batcher.
 
 Batch windows bound how long a partially-filled bucket may wait. With
 ``adaptive=True`` the window is *burst-aware*: each bucket tracks an EWMA of

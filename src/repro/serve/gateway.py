@@ -29,8 +29,16 @@ Design points:
     ``plan.decode_batch`` — the per-channel host numpy loops coalesce across
     the whole bucket — and the restore + cloud forward jit-compile once per
     bucket, never per request;
-  * transport timing is simulated (deterministic virtual clock), compute
-    timing is measured — telemetry keeps the two separate.
+  * the cloud's service capacity is a pluggable
+    :class:`repro.serve.executor.CloudExecutor`: flushed buckets are
+    ``submit``-ted and come back as tickets with virtual start/done times
+    (``SerialExecutor`` = the single serial cloud, the default;
+    ``MultiQueueExecutor`` = N parallel replicas), and an optional
+    ``AdmissionPolicy`` sheds excess load explicitly before any edge
+    compute is spent;
+  * transport and cloud-service timing run on a deterministic virtual
+    clock; the real compute's wall time is measured separately (and is the
+    virtual duration under the default ``MeasuredCost`` model).
 """
 from __future__ import annotations
 
@@ -47,10 +55,12 @@ from repro.core.split import SplitStats, _jitted_cnn_fns, activation_stats
 from repro.pipeline import Capabilities, ModelSpec, OperatingPoint, negotiate
 from repro.serve.batcher import EncodedRequest, MicroBatch, MicroBatcher
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
+from repro.serve.executor import (AdmissionPolicy, CloudExecutor, ExecTicket,
+                                  RequestShed, SerialExecutor)
 from repro.serve.rate_control import ContentKeyedController, RateController
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
-from repro.serve.telemetry import RequestRecord, Telemetry
+from repro.serve.telemetry import (RequestRecord, ShedRecord, Telemetry)
 
 
 @dataclass
@@ -59,6 +69,10 @@ class GatewayResponse:
     logits: np.ndarray            # (num_classes,)
     op: OperatingPoint
     stats: SplitStats             # wire accounting for this request
+
+    @property
+    def shed(self) -> bool:       # duck-type discriminator vs RequestShed
+        return False
 
 
 class ServingGateway:
@@ -78,6 +92,9 @@ class ServingGateway:
               negotiated against it (refuse or downgrade) before encoding
     max_batch : micro-batch cap (1 = naive one-at-a-time serving)
     fused : use the Pallas fused-consolidation restore path
+    executor : CloudExecutor modeling the cloud's service capacity on the
+              virtual clock (None = SerialExecutor(), the single serial
+              cloud of previous releases)
     """
 
     def __init__(self, params, baf_bank: dict, *,
@@ -86,7 +103,8 @@ class ServingGateway:
                  default_op: OperatingPoint | None = None,
                  backend: str | None = None, max_batch: int = 8,
                  fused: bool = True,
-                 capabilities: Capabilities | None = None):
+                 capabilities: Capabilities | None = None,
+                 executor: CloudExecutor | None = None):
         if not baf_bank:
             raise ValueError("empty BaF bank")
         self.params = params
@@ -104,6 +122,15 @@ class ServingGateway:
         self.default_op = self._fit_op(default_op)
         self.max_batch = max_batch
         self.fused = fused
+        self.executor = executor if executor is not None else SerialExecutor()
+        if self.executor.run_fn is not None:
+            # each gateway binds its own batched decode+restore+forward; a
+            # shared executor would silently run the last binder's plans
+            # against every gateway's blobs (and each serve() resets the
+            # other's queues mid-use)
+            raise ValueError("executor is already bound to another gateway; "
+                             "construct one executor per gateway")
+        self.executor.run_fn = self._run_batch
         # process-wide jitted CNN halves (core.split caches them): gateways
         # share one trace cache, so spinning up per-tenant/solo gateways in
         # benchmarks and tests does not recompile per instance
@@ -167,22 +194,34 @@ class ServingGateway:
         logits = np.asarray(jax.block_until_ready(logits))
         return logits, time.perf_counter() - t0
 
-    def _process_batch(self, batch: MicroBatch, responses: list,
+    def _record_ticket(self, ticket: ExecTicket, responses,
                        telemetry: Telemetry) -> None:
-        t_dispatch = max(r.t_arrive for r in batch.requests)
-        logits, compute_s = self._run_batch(batch)
+        """Fan one finished executor ticket out to per-request results."""
+        batch = ticket.batch
         for row, req in enumerate(batch.requests):      # padding rows ignored
-            op, stats, tx = req.meta
-            responses[req.req_id] = GatewayResponse(
-                req_id=req.req_id, logits=logits[row], op=op, stats=stats)
+            op, stats, tx = req.meta[:3]
+            out = GatewayResponse(req_id=req.req_id, logits=ticket.logits[row],
+                                  op=op, stats=stats)
+            # "" is the documented single-tenant sentinel (serve/batcher.py);
+            # the multi-tenant arrive handler always sets a tenant name and
+            # appends the UplinkJob as meta[3]
+            multi_tenant = req.tenant != ""
+            if multi_tenant:
+                responses[req.tenant][req.req_id] = out
+            else:
+                responses[req.req_id] = out
             telemetry.record(RequestRecord(
                 req_id=req.req_id, c=op.c, bits=op.bits,
                 bits_on_wire=stats.wire_bits,
-                wire_latency_s=tx.latency_s,
-                queue_wait_s=t_dispatch - req.t_arrive,
-                compute_s=compute_s,
+                wire_latency_s=tx.t_arrive - tx.t_submit,
+                queue_wait_s=ticket.t_start - req.t_arrive,
+                compute_s=ticket.service_s,
                 batch_size=len(batch.requests),
-                padded_size=batch.padded_size))
+                padded_size=batch.padded_size,
+                tenant=req.tenant,
+                sched_wait_s=(tx.t_submit - req.meta[3].t_enqueue
+                              if multi_tenant else 0.0),
+                exec_queue=ticket.queue))
 
     # -- orchestration loop -------------------------------------------------
     def serve(self, imgs, *, submit_times=None) -> tuple[list[GatewayResponse],
@@ -191,11 +230,17 @@ class ServingGateway:
 
         Responses come back in submission order regardless of channel
         reordering or batching; telemetry holds the per-request records.
+        The cloud side runs through ``self.executor`` on the virtual clock,
+        so queue_wait/latency telemetry includes waiting for busy cloud
+        queues — the same accounting as the multi-tenant event loop
+        (previous releases dispatched single-tenant batches the instant
+        they filled, modeling no cloud occupancy at all).
         """
         imgs = np.asarray(imgs)
         n = imgs.shape[0]
         if submit_times is None:
             submit_times = [0.0] * n
+        self.executor.reset()
         # 1. edge side: rate control, encode, transmit — in submit-time order
         # (the simulated link is FIFO by call, so out-of-order calls would
         # charge early requests for wire time the late ones occupied)
@@ -205,18 +250,30 @@ class ServingGateway:
                                                       float(submit_times[i]))
             inflight.append((i, op, blob, stats, tx))
         # 2. cloud side: micro-batch encoded blobs in arrival order; decode
-        # runs batched per bucket inside _run_batch
+        # runs batched per bucket inside _run_batch, scheduled by the
+        # executor (tickets carry the virtual start/done times)
         inflight.sort(key=lambda item: (item[4].t_arrive, item[0]))
         responses: list[GatewayResponse | None] = [None] * n
         telemetry = Telemetry()
         batcher = MicroBatcher(max_batch=self.max_batch)
+
+        def run(batch: MicroBatch) -> None:
+            # submit plans the virtual times and runs the real compute;
+            # results are consumed (and the batch/logits refs released)
+            # immediately, so memory tracks one batch, not the workload
+            ticket = self.executor.submit(
+                batch, max(r.t_arrive for r in batch.requests))
+            self.executor.on_start(ticket)
+            self._record_ticket(ticket, responses, telemetry)
+            self.executor.complete(ticket)
+
         for i, op, blob, stats, tx in inflight:
             req = EncodedRequest(req_id=i, blob=blob, t_arrive=tx.t_arrive,
                                  meta=(op, stats, tx))
             for full in batcher.add(req):
-                self._process_batch(full, responses, telemetry)
+                run(full)
         for rest in batcher.flush():
-            self._process_batch(rest, responses, telemetry)
+            run(rest)
         assert all(r is not None for r in responses)
         return responses, telemetry
 
@@ -257,14 +314,28 @@ class MultiTenantGateway(ServingGateway):
                   arrival-rate EWMA (burst-aware: bursts flush near-full
                   buckets fast, sparse traffic stops waiting for stragglers
                   that are not coming)
-        done    : batched decode + restore + cloud forward finished (the
-                  cloud is modeled as a serial executor on the virtual
-                  clock; compute durations are measured wall time)
+        exec_start : the cloud executor's queue begins serving a dispatched
+                  batch (``executor.submit`` planned its virtual start/done
+                  when the bucket flushed; depth introspection follows these
+                  events, so admission control sees the live backlog)
+        exec_done : batched decode + restore + cloud forward finished on the
+                  executor's virtual clock; responses + telemetry record
+
+    The cloud is a pluggable :class:`repro.serve.executor.CloudExecutor`:
+    the default ``SerialExecutor`` reproduces the single serial cloud of
+    previous releases; ``MultiQueueExecutor`` models N parallel replicas
+    with work-conserving queue selection. An optional ``admission`` policy
+    (token buckets, queue-depth thresholds) runs at submit — before any
+    edge compute or encoding — and every rejection becomes an explicit
+    :class:`RequestShed` in the tenant's response list plus a ``shed``
+    telemetry record; nothing is ever silently dropped.
 
     Per-tenant channels must be unmetered — the *shared* budget lives in the
     scheduler; a per-channel budget would meter the same bits twice.
-    Channels are reset at the start of every ``serve_tenants`` call, so a
-    repeat of the same workload replays bit-identically.
+    Channels, executor, and admission state are reset at the start of every
+    ``serve_tenants`` call, so a repeat of the same workload replays
+    bit-identically (exactly so when the executor uses a deterministic cost
+    model such as ``LinearCostModel``).
     """
 
     def __init__(self, params, baf_bank: dict, *,
@@ -280,11 +351,14 @@ class MultiTenantGateway(ServingGateway):
                  tick_s: float = 1.0, quantum_bits: int | None = None,
                  batch_window_s: float | None = 0.02,
                  adaptive_window: bool = False,
-                 min_window_s: float = 0.0, seed: int = 0):
+                 min_window_s: float = 0.0, seed: int = 0,
+                 executor: CloudExecutor | None = None,
+                 admission: AdmissionPolicy | None = None):
         super().__init__(params, baf_bank, channel=None, controller=None,
                          default_op=default_op, backend=backend,
                          max_batch=max_batch, fused=fused,
-                         capabilities=capabilities)
+                         capabilities=capabilities, executor=executor)
+        self.admission = admission
         specs = list(tenants)
         if not specs:
             raise ValueError("need at least one tenant")
@@ -331,14 +405,19 @@ class MultiTenantGateway(ServingGateway):
 
     # -- orchestration ------------------------------------------------------
     def serve_tenants(self, workload: "list[TenantRequest]") -> tuple[
-            dict[str, list[GatewayResponse]], Telemetry]:
+            dict[str, list], Telemetry]:
         """Run the event loop over the whole workload; returns per-tenant
-        responses (in per-tenant submission order) and merged telemetry."""
+        outcomes (in per-tenant submission order — each entry is a
+        :class:`GatewayResponse` or an explicit :class:`RequestShed`) and
+        merged telemetry (served records + the separate ``shed`` series)."""
         for w in workload:
             if w.tenant not in self.specs:
                 raise KeyError(f"unknown tenant {w.tenant!r}")
         for ch in self.channels.values():
             ch.reset()
+        self.executor.reset()
+        if self.admission is not None:
+            self.admission.reset()
         sched = DeficitRoundRobinScheduler(self.specs.values(),
                                            **self._sched_args)
         self.last_scheduler = sched          # post-run introspection (tests,
@@ -347,7 +426,7 @@ class MultiTenantGateway(ServingGateway):
                                window_s=self.batch_window_s,
                                adaptive=self.adaptive_window,
                                min_window_s=self.min_window_s)
-        responses: dict[str, dict[int, GatewayResponse]] = {
+        responses: dict[str, dict[int, object]] = {
             n: {} for n in self.specs}
         counts = {n: 0 for n in self.specs}
 
@@ -372,14 +451,14 @@ class MultiTenantGateway(ServingGateway):
         # windows can move a group's deadline *earlier* as arrivals sharpen
         # the rate estimate; re-push then (stale later events no-op via gen)
         scheduled_flushes: dict[int, float] = {}
-        cloud_busy = 0.0
 
         def dispatch(batch: MicroBatch, t_ready: float) -> None:
-            nonlocal cloud_busy
-            start = max(t_ready, cloud_busy)
-            logits, compute_s = self._run_batch(batch)
-            cloud_busy = start + compute_s
-            push(cloud_busy, "done", (batch, logits, start, compute_s))
+            # the executor plans the batch onto a queue of its virtual
+            # clock; the loop replays the planned times as events so depth
+            # introspection (admission's signal) tracks the virtual clock
+            ticket = self.executor.submit(batch, t_ready)
+            push(ticket.t_start, "exec_start", ticket)
+            push(ticket.t_done, "exec_done", ticket)
 
         for w in workload:
             push(w.t_submit, "submit", w)
@@ -392,6 +471,22 @@ class MultiTenantGateway(ServingGateway):
                 spec = self.specs[w.tenant]
                 local_id = counts[w.tenant]
                 counts[w.tenant] += 1
+                if self.admission is not None:
+                    decision = self.admission.admit(
+                        tenant=w.tenant, priority=spec.priority, t=t,
+                        executor=self.executor)
+                    if not decision.admitted:
+                        # shed BEFORE any edge compute or encoding is spent;
+                        # the outcome is explicit: it takes the response slot
+                        # and lands in telemetry's separate shed series
+                        outcome = RequestShed(
+                            req_id=local_id, tenant=w.tenant, t_submit=t,
+                            reason=decision.reason, priority=spec.priority)
+                        responses[w.tenant][local_id] = outcome
+                        telemetry.record_shed(ShedRecord(
+                            req_id=local_id, tenant=w.tenant, t_submit=t,
+                            reason=decision.reason, priority=spec.priority))
+                        continue
                 img = np.asarray(w.img)
                 if img.ndim == 3:
                     img = img[None]
@@ -449,23 +544,12 @@ class MultiTenantGateway(ServingGateway):
                         scheduled_flushes.pop(gen, None)
                         dispatch(batch, t)
 
-            elif kind == "done":
-                batch, logits, start, compute_s = payload
-                for row, req in enumerate(batch.requests):
-                    op, stats, tx, job = req.meta
-                    responses[req.tenant][req.req_id] = GatewayResponse(
-                        req_id=req.req_id, logits=logits[row], op=op,
-                        stats=stats)
-                    telemetry.record(RequestRecord(
-                        req_id=req.req_id, c=op.c, bits=op.bits,
-                        bits_on_wire=stats.wire_bits,
-                        wire_latency_s=tx.t_arrive - tx.t_submit,
-                        queue_wait_s=start - req.t_arrive,
-                        compute_s=compute_s,
-                        batch_size=len(batch.requests),
-                        padded_size=batch.padded_size,
-                        tenant=req.tenant,
-                        sched_wait_s=tx.t_submit - job.t_enqueue))
+            elif kind == "exec_start":
+                self.executor.on_start(payload)
+
+            elif kind == "exec_done":
+                self._record_ticket(payload, responses, telemetry)
+                self.executor.complete(payload)   # releases batch/logits refs
 
             # events may drain while buckets still hold requests (no batch
             # window): sweep the leftovers through the same dispatch path
@@ -473,9 +557,12 @@ class MultiTenantGateway(ServingGateway):
                 for rest in batcher.flush():
                     dispatch(rest, max(r.t_arrive for r in rest.requests))
 
+        # no silent drops: every submission ended as exactly one response
+        # or one explicit shed outcome
         out = {}
         for name, got in responses.items():
             assert len(got) == counts[name], (
-                f"tenant {name}: {len(got)}/{counts[name]} responses")
+                f"tenant {name}: {len(got)}/{counts[name]} outcomes")
             out[name] = [got[i] for i in range(counts[name])]
+        assert len(telemetry) + len(telemetry.shed) == len(workload)
         return out, telemetry

@@ -36,11 +36,14 @@ from typing import Any, Iterable
 
 @dataclass(frozen=True)
 class TenantSpec:
-    """Static per-tenant policy: DRR weight and an optional quality floor
-    override consulted by the rate controller (None = controller default)."""
+    """Static per-tenant policy: DRR weight, an optional quality floor
+    override consulted by the rate controller (None = controller default),
+    and the priority class admission control sheds by (higher = shed later;
+    see repro.serve.executor.QueueDepthAdmission)."""
     name: str
     weight: float = 1.0
     quality_floor_db: float | None = None
+    priority: int = 0
 
     def __post_init__(self):
         if self.weight <= 0:

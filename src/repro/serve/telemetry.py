@@ -2,9 +2,16 @@
 
 Wire-side numbers (bits on wire, channel latency, queue wait) come from the
 simulated channel's virtual clock; compute-side numbers (restore + cloud
-forward) are measured wall clock. ``total_latency_s`` adds the two — the
-simulated transport and the real compute — which is the quantity the
-benchmark reports percentiles over.
+forward) follow the executor's virtual-clock cost model (identical to the
+measured wall clock under the default ``MeasuredCost``). ``total_latency_s``
+adds the two, which is the quantity the benchmark reports percentiles over.
+
+Shed requests live in their own series (:class:`ShedRecord`, recorded via
+:meth:`Telemetry.record_shed`): admission rejections never appear among the
+served records, so latency p50/p99 measure *served* requests only — an
+overloaded gateway shedding half its traffic cannot fake a good p99 (or be
+charged zero-latency phantoms). ``summary()`` reports the shed series
+alongside, as counts and a shed rate.
 """
 from __future__ import annotations
 
@@ -20,17 +27,28 @@ class RequestRecord:
     bits: int
     bits_on_wire: int
     wire_latency_s: float       # submit -> arrival at the cloud (simulated)
-    queue_wait_s: float         # arrival -> micro-batch dispatch (simulated)
-    compute_s: float            # restore + cloud forward (measured, per batch)
+    queue_wait_s: float         # arrival -> executor service start (virtual)
+    compute_s: float            # restore + cloud forward (executor cost model)
     batch_size: int             # true (unpadded) size of the micro-batch
     padded_size: int
     tenant: str = ""            # owning tenant ("" = single-tenant serving)
     sched_wait_s: float = 0.0   # encode done -> uplink grant (simulated)
+    exec_queue: int = 0         # executor queue that served the batch
 
     @property
     def total_latency_s(self) -> float:
         return (self.sched_wait_s + self.wire_latency_s + self.queue_wait_s
                 + self.compute_s)
+
+
+@dataclass(frozen=True)
+class ShedRecord:
+    """One admission rejection — its own series, never a latency record."""
+    req_id: int                 # per-tenant sequence number
+    tenant: str
+    t_submit: float
+    reason: str                 # admission policy's explicit justification
+    priority: int = 0
 
 
 def jain_fairness(values) -> float:
@@ -43,16 +61,34 @@ def jain_fairness(values) -> float:
 
 
 class Telemetry:
-    """Accumulates request records and reports aggregate percentiles."""
+    """Accumulates request records and reports aggregate percentiles.
+
+    Served requests (``records``) and admission rejections (``shed``) are
+    separate series; ``__len__``/``percentile`` cover served only."""
 
     def __init__(self):
         self.records: list[RequestRecord] = []
+        self.shed: list[ShedRecord] = []
 
     def record(self, rec: RequestRecord) -> None:
         self.records.append(rec)
 
+    def record_shed(self, rec: ShedRecord) -> None:
+        self.shed.append(rec)
+
     def __len__(self) -> int:
         return len(self.records)
+
+    def shed_by_tenant(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for s in self.shed:
+            out[s.tenant] = out.get(s.tenant, 0) + 1
+        return out
+
+    def shed_rate(self) -> float:
+        """Fraction of all submissions that were shed (0.0 when none)."""
+        total = len(self.records) + len(self.shed)
+        return len(self.shed) / total if total else 0.0
 
     def percentile(self, field_name: str, p: float,
                    tenant: str | None = None) -> float:
@@ -66,19 +102,29 @@ class Telemetry:
         return sorted({r.tenant for r in self.records})
 
     def per_tenant(self) -> dict[str, dict]:
-        """{tenant: summary} over each tenant's own records."""
+        """{tenant: summary} over each tenant's own records.
+
+        Tenants with served traffic report latency percentiles over their
+        *served* requests only; their shed count rides alongside. A tenant
+        whose every request was shed still appears — shedding must never
+        erase a tenant from the report — with the same row schema (latency
+        fields None, counts 0), so consumers never hit a KeyError; guard on
+        ``count`` before using the latency numbers."""
+        shed = self.shed_by_tenant()
         out = {}
-        for t in self.tenants():
+        for t in sorted(set(self.tenants()) | set(shed)):
             recs = [r for r in self.records if r.tenant == t]
+            lat = [r.total_latency_s for r in recs]
             out[t] = {
                 "count": len(recs),
+                "shed": shed.get(t, 0),
                 "bits_on_wire": int(sum(r.bits_on_wire for r in recs)),
-                "p50_latency_s": float(np.percentile(
-                    [r.total_latency_s for r in recs], 50)),
-                "p99_latency_s": float(np.percentile(
-                    [r.total_latency_s for r in recs], 99)),
-                "mean_sched_wait_s": float(np.mean(
-                    [r.sched_wait_s for r in recs])),
+                "p50_latency_s": (float(np.percentile(lat, 50))
+                                  if recs else None),
+                "p99_latency_s": (float(np.percentile(lat, 99))
+                                  if recs else None),
+                "mean_sched_wait_s": (float(np.mean(
+                    [r.sched_wait_s for r in recs])) if recs else None),
                 "operating_points": sorted({(r.c, r.bits) for r in recs}),
             }
         return out
@@ -91,9 +137,16 @@ class Telemetry:
         return jain_fairness(per.values())
 
     def summary(self, *, wall_s: float | None = None) -> dict:
-        """Aggregate view; pass the measured wall time for requests/sec."""
+        """Aggregate view; pass the measured wall time for requests/sec.
+
+        Latency percentiles cover served requests only; the shed series is
+        summarized separately (``shed``/``shed_rate``)."""
         if not self.records:
-            return {"count": 0}
+            out = {"count": 0}
+            if self.shed:
+                out.update({"shed": len(self.shed), "shed_rate": 1.0,
+                            "shed_by_tenant": self.shed_by_tenant()})
+            return out
         out = {
             "count": len(self.records),
             "mean_bits_on_wire": float(np.mean([r.bits_on_wire
@@ -106,6 +159,10 @@ class Telemetry:
             "p99_compute_s": self.percentile("compute_s", 99),
             "operating_points": sorted({(r.c, r.bits) for r in self.records}),
         }
+        if self.shed:
+            out["shed"] = len(self.shed)
+            out["shed_rate"] = self.shed_rate()
+            out["shed_by_tenant"] = self.shed_by_tenant()
         if wall_s is not None and wall_s > 0:
             out["requests_per_s"] = len(self.records) / wall_s
         tenants = self.tenants()
@@ -117,8 +174,12 @@ class Telemetry:
     def format_summary(self, *, wall_s: float | None = None) -> str:
         s = self.summary(wall_s=wall_s)
         if not s["count"]:
-            return "no requests"
+            return ("no requests" if not self.shed
+                    else f"no requests served ({len(self.shed)} shed)")
         lines = [f"requests           : {s['count']}"]
+        if "shed" in s:
+            lines.append(f"shed (admission)   : {s['shed']} "
+                         f"({100 * s['shed_rate']:.0f}% of offered)")
         if "requests_per_s" in s:
             lines.append(f"requests/sec       : {s['requests_per_s']:.1f}")
         lines += [
@@ -133,9 +194,15 @@ class Telemetry:
         if "fairness_bits" in s:
             lines.append(f"fairness (bits)    : {s['fairness_bits']:.3f}")
             for t, ts in self.per_tenant().items():
-                lines.append(
-                    f"  tenant {t or '<default>':<10}: n={ts['count']:<4} "
-                    f"p50/p99 {ts['p50_latency_s']*1e3:.2f}/"
-                    f"{ts['p99_latency_s']*1e3:.2f} ms  "
-                    f"ops {ts['operating_points']}")
+                shed = f" shed={ts['shed']}" if ts["shed"] else ""
+                if ts["count"]:
+                    lines.append(
+                        f"  tenant {t or '<default>':<10}: "
+                        f"n={ts['count']:<4} "
+                        f"p50/p99 {ts['p50_latency_s']*1e3:.2f}/"
+                        f"{ts['p99_latency_s']*1e3:.2f} ms  "
+                        f"ops {ts['operating_points']}{shed}")
+                else:
+                    lines.append(f"  tenant {t or '<default>':<10}: "
+                                 f"n=0   {shed}")
         return "\n".join(lines)

@@ -1,0 +1,432 @@
+"""Cloud executor + admission control: work conservation, no silent drops,
+shed-priority ordering, deterministic replay, and the shed-telemetry split.
+
+Property tests run under hypothesis when installed (requirements-dev.txt);
+seeded deterministic sweeps cover the same invariants on bare environments.
+"""
+import jax
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.configs.yolo_baf import smoke_config, smoke_data_config
+from repro.core.baf import BaFConvConfig, init_baf_conv
+from repro.data.synthetic import shapes_batch_iterator
+from repro.models.cnn import init_cnn
+from repro.serve import (AlwaysAdmit, ChannelConfig, CompositeAdmission,
+                         LinearCostModel, MeasuredCost, MicroBatch,
+                         MultiQueueExecutor, MultiTenantGateway,
+                         OperatingPoint, QueueDepthAdmission, RequestShed,
+                         SerialExecutor, ShedRecord, Telemetry,
+                         TenantRequest, TenantSpec, TokenBucketAdmission,
+                         priority_depth_limits)
+from repro.serve.telemetry import RequestRecord
+
+
+def _batch(n=4, key="k"):
+    return MicroBatch(key=key, requests=[None] * n, target=n)
+
+
+def _bind(ex, compute_s=0.003):
+    ex.run_fn = lambda batch: (np.zeros((batch.padded_size, 4)), compute_s)
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# Executor mechanics
+# ---------------------------------------------------------------------------
+
+def test_linear_cost_model_is_deterministic():
+    cm = LinearCostModel(base_s=0.01, per_item_s=0.002)
+    assert cm.duration_s(_batch(4), measured_s=123.0) == pytest.approx(0.018)
+    assert MeasuredCost().duration_s(_batch(4), 0.7) == 0.7
+
+
+def test_serial_executor_serializes_on_the_virtual_clock():
+    ex = _bind(SerialExecutor(cost=LinearCostModel(0.01, 0.0)))
+    a = ex.submit(_batch(), 0.0)
+    b = ex.submit(_batch(), 0.0)          # ready at 0 but the queue is busy
+    c = ex.submit(_batch(), 0.5)          # ready after the queue went idle
+    assert (a.t_start, a.t_done) == (0.0, pytest.approx(0.01))
+    assert b.t_start == pytest.approx(a.t_done)
+    assert c.t_start == 0.5
+    assert ex.capacity == 1
+
+
+def test_multi_queue_runs_batches_in_parallel():
+    ex = _bind(MultiQueueExecutor(4, cost=LinearCostModel(0.01, 0.0)))
+    tickets = [ex.submit(_batch(), 0.0) for _ in range(4)]
+    assert all(t.t_start == 0.0 for t in tickets)          # all queues free
+    assert len({t.queue for t in tickets}) == 4
+    fifth = ex.submit(_batch(), 0.0)
+    assert fifth.t_start == pytest.approx(0.01)            # earliest finish
+
+
+def test_per_queue_service_rates_scale_durations():
+    ex = _bind(MultiQueueExecutor(2, rates=[1.0, 2.0],
+                                  cost=LinearCostModel(0.01, 0.0)))
+    # the fast queue (rate 2 -> 5 ms) finishes first, so it wins the pick
+    t = ex.submit(_batch(), 0.0)
+    assert t.queue == 1
+    assert t.service_s == pytest.approx(0.005)
+
+
+def test_bucket_affinity_breaks_finish_time_ties():
+    ex = _bind(MultiQueueExecutor(3, cost=LinearCostModel(0.01, 0.0)))
+    a = ex.submit(_batch(key="x"), 0.0)
+    for t in (a, *[ex.submit(_batch(key="y"), 0.0) for _ in range(2)]):
+        ex.on_start(t)
+        ex.complete(t)
+    # all queues idle again and tie on finish time: "x" goes back to the
+    # queue that last served it
+    b = ex.submit(_batch(key="x"), 1.0)
+    assert b.queue == a.queue
+
+
+def test_poll_returns_completion_order():
+    ex = _bind(MultiQueueExecutor(2, rates=[1.0, 4.0],
+                                  cost=LinearCostModel(0.01, 0.0)))
+    slow = ex.submit(_batch(), 0.0)        # fast queue wins the first pick
+    ex.submit(_batch(), 0.0)               # second lands on the slow queue
+    fast, slow = sorted(ex.history, key=lambda t: t.t_done)
+    assert fast.t_done < slow.t_done
+    # virtual completion order, not submission order — matches exec_done
+    assert [t.seq for t in ex.poll(1.0)] == [fast.seq, slow.seq]
+
+
+def test_depth_tracking_and_poll_drain():
+    ex = _bind(MultiQueueExecutor(2, cost=LinearCostModel(0.01, 0.0)))
+    t1 = ex.submit(_batch(), 0.0)
+    t2 = ex.submit(_batch(), 0.0)
+    t3 = ex.submit(_batch(), 0.0)
+    assert ex.depth() == 3 and ex.max_depth_seen == 3
+    assert sum(ex.queue_depths()) == 3
+    done_now = ex.poll(0.01)
+    assert {t.seq for t in done_now} == {t1.seq, t2.seq}
+    for t in (t1, t2):
+        ex.on_start(t)
+        ex.complete(t)
+    assert ex.depth() == 1
+    assert [t.seq for t in ex.drain()] == [t3.seq]
+    with pytest.raises(RuntimeError):
+        ex.complete(t1)                   # double completion is a bug
+    ex.reset()
+    assert ex.depth() == 0 and ex.history == []
+
+
+def test_executor_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        MultiQueueExecutor(0)
+    with pytest.raises(ValueError):
+        MultiQueueExecutor(2, rates=[1.0])
+    with pytest.raises(ValueError):
+        MultiQueueExecutor(2, rates=[1.0, -1.0])
+    ex = MultiQueueExecutor(2)
+    with pytest.raises(RuntimeError, match="run_fn"):
+        ex.submit(_batch(), 0.0)
+
+
+def _work_conserving_replay(ex, submissions):
+    """Re-derive every ticket's queue choice from the executor's stated
+    rule; any divergence breaks work conservation or determinism."""
+    busy = [0.0] * ex.capacity
+    rates = [q.rate for q in ex._queues]
+    last_key = [None] * ex.capacity
+    for (t_ready, size, key), ticket in zip(submissions, ex.history):
+        best = None
+        for i in range(ex.capacity):
+            start = max(t_ready, busy[i])
+            done = start + ticket.service_s * rates[ticket.queue] / rates[i]
+            affinity = 0 if last_key[i] == key else 1
+            rank = (done, affinity, i)
+            if best is None or rank < best[0]:
+                best = (rank, i, start)
+        _, i, start = best
+        assert ticket.queue == i, (ticket.seq, ticket.queue, i)
+        assert ticket.t_start == pytest.approx(start)
+        busy[i] = ticket.t_done
+        last_key[i] = key
+
+
+@settings(max_examples=60, deadline=None)
+@given(plan=(st.lists(st.tuples(st.floats(0.0, 2.0), st.integers(1, 8)),
+                      min_size=1, max_size=30)
+             if HAVE_HYPOTHESIS else None),
+       n_queues=st.integers(1, 5) if HAVE_HYPOTHESIS else None)
+def test_work_conservation_property(plan, n_queues):
+    """A batch starts at max(ready, earliest-finishing queue): no queue
+    sits idle while ready work waits, for any workload."""
+    ex = _bind(MultiQueueExecutor(n_queues,
+                                  cost=LinearCostModel(0.004, 0.001)))
+    subs = []
+    t = 0.0
+    for dt, size in plan:
+        t += dt
+        key = f"k{size}"
+        ex.submit(_batch(size, key=key), t)
+        subs.append((t, size, key))
+    _work_conserving_replay(ex, subs)
+
+
+def test_work_conservation_seeded(rng):
+    """The same invariant on 50 seeded random workloads (no hypothesis)."""
+    for trial in range(50):
+        n_queues = int(rng.integers(1, 6))
+        rates = [float(r) for r in rng.uniform(0.5, 2.0, size=n_queues)]
+        ex = _bind(MultiQueueExecutor(n_queues, rates=rates,
+                                      cost=LinearCostModel(0.004, 0.001)))
+        subs, t = [], 0.0
+        for _ in range(int(rng.integers(1, 40))):
+            t += float(rng.uniform(0, 0.05))
+            size = int(rng.integers(1, 9))
+            key = f"k{int(rng.integers(0, 3))}"
+            ex.submit(_batch(size, key=key), t)
+            subs.append((t, size, key))
+        _work_conserving_replay(ex, subs)
+
+
+def test_multi_queue_beats_serial_makespan():
+    """4 queues under deep backlog finish ~4x sooner on the virtual clock."""
+    cost = LinearCostModel(0.01, 0.0)
+    serial = _bind(SerialExecutor(cost=cost))
+    multi = _bind(MultiQueueExecutor(4, cost=cost))
+    for ex in (serial, multi):
+        for _ in range(32):
+            ex.submit(_batch(), 0.0)
+    span = lambda ex: max(t.t_done for t in ex.history)  # noqa: E731
+    assert span(serial) == pytest.approx(0.32)
+    assert span(multi) == pytest.approx(0.08)
+    assert span(serial) / span(multi) >= 3.9
+
+
+# ---------------------------------------------------------------------------
+# Admission policies
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_caps_sustained_rate():
+    pol = TokenBucketAdmission(rate_per_s=10.0, burst=3.0)
+    ex = _bind(SerialExecutor())
+    admitted = sum(
+        pol.admit(tenant="a", priority=0, t=i * 0.01, executor=ex).admitted
+        for i in range(100))                             # 1 s of 100 req/s
+    # burst (3) + ~1 s of refill (10): the flood is clipped to the bucket
+    assert 12 <= admitted <= 14
+    d = pol.admit(tenant="a", priority=0, t=0.991, executor=ex)
+    assert not d.admitted and "token-bucket" in d.reason
+    # an independent tenant has its own bucket
+    assert pol.admit(tenant="b", priority=0, t=0.991, executor=ex).admitted
+
+
+def test_token_bucket_per_tenant_override_and_reset():
+    pol = TokenBucketAdmission(1.0, 1.0, per_tenant={"gold": (100.0, 10.0)})
+    ex = _bind(SerialExecutor())
+    assert sum(pol.admit(tenant="gold", priority=0, t=0.0,
+                         executor=ex).admitted for _ in range(10)) == 10
+    assert sum(pol.admit(tenant="be", priority=0, t=0.0,
+                         executor=ex).admitted for _ in range(10)) == 1
+    pol.reset()
+    assert pol.admit(tenant="be", priority=0, t=0.0, executor=ex).admitted
+
+
+def test_queue_depth_admission_sheds_at_limit():
+    ex = _bind(MultiQueueExecutor(2, cost=LinearCostModel(0.01, 0.0)))
+    pol = QueueDepthAdmission(max_depth=2, per_priority={1: 4})
+    for _ in range(2):
+        ex.submit(_batch(), 0.0)
+    low = pol.admit(tenant="a", priority=0, t=0.0, executor=ex)
+    high = pol.admit(tenant="a", priority=1, t=0.0, executor=ex)
+    assert not low.admitted and "queue-depth" in low.reason
+    assert high.admitted                   # premium rides the deeper limit
+
+
+@settings(max_examples=100, deadline=None)
+@given(depth=st.integers(0, 30) if HAVE_HYPOTHESIS else None,
+       base=st.integers(1, 8) if HAVE_HYPOTHESIS else None,
+       headroom=st.integers(0, 6) if HAVE_HYPOTHESIS else None,
+       p_lo=st.integers(0, 3) if HAVE_HYPOTHESIS else None,
+       p_hi=st.integers(0, 3) if HAVE_HYPOTHESIS else None)
+def test_shed_priority_ordering_property(depth, base, headroom, p_lo, p_hi):
+    """With monotone per-priority limits, admission is monotone in
+    priority: a shed premium request implies every best-effort request at
+    the same backlog is shed too."""
+    p_lo, p_hi = min(p_lo, p_hi), max(p_lo, p_hi)
+    pol = QueueDepthAdmission(
+        base, per_priority=priority_depth_limits(base, range(4),
+                                                 headroom=headroom))
+    ex = _bind(MultiQueueExecutor(1, cost=LinearCostModel(1.0, 0.0)))
+    for _ in range(depth):
+        ex.submit(_batch(), 0.0)
+    lo = pol.admit(tenant="x", priority=p_lo, t=0.0, executor=ex).admitted
+    hi = pol.admit(tenant="x", priority=p_hi, t=0.0, executor=ex).admitted
+    assert hi or not lo                    # admitted(hi) >= admitted(lo)
+
+
+def test_shed_priority_ordering_seeded(rng):
+    for _ in range(100):
+        base = int(rng.integers(1, 9))
+        headroom = int(rng.integers(0, 7))
+        depth = int(rng.integers(0, 31))
+        pol = QueueDepthAdmission(
+            base, per_priority=priority_depth_limits(base, range(4),
+                                                     headroom=headroom))
+        ex = _bind(MultiQueueExecutor(1, cost=LinearCostModel(1.0, 0.0)))
+        for _ in range(depth):
+            ex.submit(_batch(), 0.0)
+        decisions = [pol.admit(tenant="x", priority=p, t=0.0,
+                               executor=ex).admitted for p in range(4)]
+        # once a priority is admitted, every higher one is too
+        assert decisions == sorted(decisions)
+
+
+def test_composite_admission_short_circuits():
+    bucket = TokenBucketAdmission(1.0, 1.0)
+    pol = CompositeAdmission([QueueDepthAdmission(1), bucket])
+    ex = _bind(MultiQueueExecutor(1, cost=LinearCostModel(1.0, 0.0)))
+    ex.submit(_batch(), 0.0)               # backlog hits the depth limit
+    d = pol.admit(tenant="a", priority=0, t=0.0, executor=ex)
+    assert not d.admitted and "queue-depth" in d.reason
+    # the depth rejection must not have spent the tenant's token
+    assert bucket._state.get("a") is None
+    assert AlwaysAdmit().admit(tenant="a", priority=0, t=0.0,
+                               executor=ex).admitted
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: shed is its own series (regression for latency pollution)
+# ---------------------------------------------------------------------------
+
+def _rec(req_id, latency):
+    return RequestRecord(req_id=req_id, c=8, bits=8, bits_on_wire=1000,
+                         wire_latency_s=latency, queue_wait_s=0.0,
+                         compute_s=0.0, batch_size=1, padded_size=1,
+                         tenant="a")
+
+
+def test_shed_records_never_pollute_latency_percentiles():
+    served = Telemetry()
+    mixed = Telemetry()
+    for i in range(20):
+        served.record(_rec(i, 0.010 + i * 1e-4))
+        mixed.record(_rec(i, 0.010 + i * 1e-4))
+    for i in range(20):                    # a flood of rejections
+        mixed.record_shed(ShedRecord(req_id=100 + i, tenant="a",
+                                     t_submit=0.0, reason="token-bucket"))
+    for p in (50, 99):
+        assert (mixed.percentile("total_latency_s", p)
+                == served.percentile("total_latency_s", p))
+    s = mixed.summary()
+    assert s["count"] == 20 and s["shed"] == 20
+    assert s["shed_rate"] == pytest.approx(0.5)
+    assert s["shed_by_tenant"] == {"a": 20}
+    assert "shed" not in served.summary()
+
+
+def test_shed_only_tenant_still_reported():
+    tel = Telemetry()
+    tel.record(_rec(0, 0.01))
+    tel.record_shed(ShedRecord(req_id=0, tenant="ghost", t_submit=0.0,
+                               reason="queue-depth 9>=8"))
+    per = tel.per_tenant()
+    assert per["ghost"]["count"] == 0 and per["ghost"]["shed"] == 1
+    assert per["a"]["count"] == 1 and per["a"]["shed"] == 0
+    # one row schema for every tenant: shed-only rows carry the same keys
+    # (latency fields None) so consumers never hit a KeyError
+    assert per["ghost"].keys() == per["a"].keys()
+    assert per["ghost"]["p99_latency_s"] is None
+    assert per["a"]["p99_latency_s"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Gateway integration: no silent drops + bit-identical replay
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_bank():
+    cnn_cfg = smoke_config()._replace(input_size=32)
+    data_cfg = smoke_data_config()._replace(image_size=32, batch_size=8)
+    params = init_cnn(jax.random.PRNGKey(0), cnn_cfg)
+    baf = init_baf_conv(jax.random.PRNGKey(8),
+                        BaFConvConfig(c=8, q=cnn_cfg.split_q, hidden=8))
+    imgs, _ = next(shapes_batch_iterator(data_cfg, seed=5))
+    return params, {8: (baf, np.arange(8))}, np.asarray(imgs)
+
+
+def _overload_gateway(params, bank, *, executor, admission):
+    return MultiTenantGateway(
+        params, bank,
+        tenants=[TenantSpec("gold", priority=1), TenantSpec("be")],
+        channel_cfg=ChannelConfig(bandwidth_bps=50e6, base_latency_s=0.001),
+        default_op=OperatingPoint(c=8, bits=8), max_batch=2,
+        tick_s=0.01, batch_window_s=0.002,
+        executor=executor, admission=admission)
+
+
+def _burst(imgs, n, dt=0.0004):
+    return [TenantRequest(("gold", "be")[i % 2], imgs[i % len(imgs)],
+                          t_submit=dt * i) for i in range(n)]
+
+
+def test_gateway_sheds_explicitly_and_drops_nothing(tiny_bank):
+    params, bank, imgs = tiny_bank
+    gw = _overload_gateway(
+        params, bank,
+        executor=MultiQueueExecutor(2, cost=LinearCostModel(0.02, 0.01)),
+        admission=QueueDepthAdmission(
+            1, per_priority=priority_depth_limits(1, [0, 1], headroom=2)))
+    work = _burst(imgs, 16)
+    out, tel = gw.serve_tenants(work)
+    # every submission ended exactly once: response or explicit shed
+    for name, n_offered in (("gold", 8), ("be", 8)):
+        assert len(out[name]) == n_offered
+    served = sum(not isinstance(r, RequestShed)
+                 for rs in out.values() for r in rs)
+    shed = [r for rs in out.values() for r in rs if isinstance(r, RequestShed)]
+    assert served + len(shed) == len(work)
+    assert shed, "this burst must overload the depth limit"
+    assert len(tel) == served and len(tel.shed) == len(shed)
+    for s in shed:
+        assert "queue-depth" in s.reason     # explicit, reasoned outcomes
+    # the brown-out is priority-ordered: best effort sheds at least as much
+    by_tenant = tel.shed_by_tenant()
+    assert by_tenant.get("be", 0) >= by_tenant.get("gold", 0)
+    # shed requests contributed zero wire bits (never encoded)
+    assert all(r.bits_on_wire > 0 for r in tel.records)
+
+
+def test_gateway_replay_is_bit_identical_with_deterministic_cost(tiny_bank):
+    params, bank, imgs = tiny_bank
+    runs = []
+    for _ in range(2):
+        gw = _overload_gateway(
+            params, bank,
+            executor=MultiQueueExecutor(2, cost=LinearCostModel(0.01, 0.002)),
+            admission=CompositeAdmission([
+                TokenBucketAdmission(2000.0, 4.0),
+                QueueDepthAdmission(2, per_priority={1: 6}),
+            ]))
+        out, tel = gw.serve_tenants(_burst(imgs, 12))
+        runs.append((out, tel))
+    (out_a, tel_a), (out_b, tel_b) = runs
+    assert tel_a.records == tel_b.records        # frozen dataclass equality
+    assert tel_a.shed == tel_b.shed
+    for name in out_a:
+        for x, y in zip(out_a[name], out_b[name]):
+            assert isinstance(x, RequestShed) == isinstance(y, RequestShed)
+            if not isinstance(x, RequestShed):
+                np.testing.assert_array_equal(x.logits, y.logits)
+
+
+def test_gateway_multi_queue_matches_serial_logits(tiny_bank):
+    """The executor is a scheduling model: it must never change results."""
+    params, bank, imgs = tiny_bank
+    cost = LinearCostModel(0.01, 0.002)
+    r_serial, _ = _overload_gateway(
+        params, bank, executor=SerialExecutor(cost=cost),
+        admission=None).serve_tenants(_burst(imgs, 8))
+    r_multi, _ = _overload_gateway(
+        params, bank, executor=MultiQueueExecutor(4, cost=cost),
+        admission=None).serve_tenants(_burst(imgs, 8))
+    for name in r_serial:
+        for a, b in zip(r_serial[name], r_multi[name]):
+            np.testing.assert_allclose(a.logits, b.logits,
+                                       atol=1e-5, rtol=1e-5)

@@ -1,10 +1,11 @@
 """The deprecation ratchet: in-repo production flows must not route through
-the deprecated loose-tuple entry points (``encode_activation`` /
-``decode_stream``). The shims stay for one release for *external* callers;
-everything under src/ and benchmarks/ is expected to be on the plan API.
+deprecated entry points.
 
-Runs the representative end-to-end paths under a recording warning filter
-and fails on any DeprecationWarning raised from the repo's own shims.
+The one-release shims (``encode_activation`` / ``decode_stream``) completed
+their deprecation cycle and are now removed (docs/MIGRATION.md); this module
+pins both halves of that promise: the representative end-to-end flows emit
+no repo-owned DeprecationWarnings (so a future shim cannot silently creep
+back into production paths), and the removed names really are gone.
 """
 import warnings
 
@@ -74,14 +75,26 @@ def test_in_repo_serving_flows_emit_no_deprecation_warnings(tiny_system):
         + "\n".join(f"{w.filename}:{w.lineno}: {w.message}" for w in bad))
 
 
-def test_shims_do_warn_when_called_directly(tiny_system):
-    """Counter-check that the filter in this module actually catches the
-    shims (guards against the ratchet silently going blind)."""
-    params, bank, imgs = tiny_system
-    from repro.core.split import encode_activation
-    eng = SplitInferenceEngine(params, bank[8][0], np.arange(8), bits=6)
-    z = eng._edge_fn(params, imgs[:1])
+def test_ratchet_filter_catches_repo_style_warnings():
+    """Canary for the filter above: a repo-style deprecation (message
+    pointing at repro.pipeline, as this repo's shims always did) must be
+    caught, or the ratchet is silently blind. Any future shim MUST follow
+    the same message convention for the ratchet to see it."""
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        encode_activation(z, np.arange(8), 6)
-    assert len(_shim_deprecations(rec)) == 1
+        warnings.warn("synthetic_shim is deprecated; use the "
+                      "repro.pipeline plan API", DeprecationWarning)
+        warnings.warn("unrelated third-party thing", DeprecationWarning)
+    caught = _shim_deprecations(rec)
+    assert len(caught) == 1
+    assert "synthetic_shim" in str(caught[0].message)
+
+
+def test_removed_shims_are_gone():
+    """The one-release deprecation window closed: the loose-tuple entry
+    points must no longer exist anywhere importable."""
+    import repro.core.split as split
+    for name in ("encode_activation", "decode_stream", "_decode_stream"):
+        assert not hasattr(split, name), (
+            f"core.split.{name} was promised removed after its one-release "
+            f"deprecation window (docs/MIGRATION.md)")

@@ -292,29 +292,5 @@ def test_negotiate_checks_wire_backend_not_family():
     assert out.wire_backend == "rans"
 
 
-# ---------------------------------------------------------------------------
-# Deprecation shims (one release)
-# ---------------------------------------------------------------------------
-
-def test_encode_activation_shim_warns_and_matches_plan():
-    from repro.core.split import encode_activation
-    plan = pipeline.compile(OperatingPoint(c=4, bits=6), _spec(4))
-    z = _z(1, 4, 4, 8)
-    blob = plan.encode(z)
-    with pytest.warns(DeprecationWarning, match="repro.pipeline"):
-        enc, stats = encode_activation(z, np.arange(4), 6)
-    assert enc.to_bytes() == blob.data
-    assert stats.wire_bits == blob.stats.wire_bits
-
-
-def test_decode_stream_shim_warns_and_matches_plan():
-    from repro.core.split import decode_stream
-    plan = pipeline.compile(OperatingPoint(c=4, bits=6), _spec(4))
-    z = _z(2, 4, 4, 8)
-    blob = plan.encode(z)
-    with pytest.warns(DeprecationWarning, match="repro.pipeline"):
-        codes, mins, maxs = decode_stream(blob.to_tensor(), 2, 4)
-    dec = plan.decode(blob)
-    np.testing.assert_array_equal(np.asarray(codes), dec.codes)
-    np.testing.assert_array_equal(np.asarray(mins), dec.mins)
-    np.testing.assert_array_equal(np.asarray(maxs), dec.maxs)
+# (the one-release encode_activation/decode_stream shims are gone; their
+# absence is pinned in tests/test_no_deprecations.py)
