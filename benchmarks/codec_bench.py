@@ -23,12 +23,14 @@ motivated acceptance: rANS payload <= 0.95x zlib payload on 8-bit
 residuals, exiting nonzero on failure.
 
 Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py and
-writes benchmarks/BENCH_codec.json.
+writes benchmarks/BENCH_codec.json — a schema'd ``repro-bench/1`` record
+(repro.obs.bench) that ``benchmarks/compare.py`` gates against the committed
+baseline: payload bits/element are deterministic (tight tolerances), MB/s
+throughputs are informational (shared CI runners).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -40,6 +42,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax.numpy as jnp
 
 from repro.core import codec as wire
+from repro.obs.bench import bench_record, metric, write_bench
 from repro.core.quant import compute_quant_params, quantize
 from repro.core.tiling import tile_batch
 
@@ -152,9 +155,33 @@ def main():
         _row("codec_ctx_floor", 0.0,
              f"rans-ctx/entropy-floor @8bit = {ctx / floor:.3f}")
 
+    # -- schema'd trajectory record (compare.py gates on the baseline's
+    # tolerances). Payload sizes are seeded-deterministic: rANS realizes the
+    # same stream byte for byte every run, zlib is looser across library
+    # versions. Throughputs vary with the host -> informational.
+    metrics = {
+        "rans_vs_zlib_8bit": metric(ratio, tolerance=0.05),
+    }
+    if "ctx_vs_floor_8bit" in results:
+        metrics["ctx_vs_floor_8bit"] = metric(results["ctx_vs_floor_8bit"],
+                                              tolerance=0.05)
+    _PAYLOAD_TOL = {"rans": 0.02, "rans-ctx": 0.02, "zlib": 0.05, "raw": 0.0}
+    for p in results["points"]:
+        point = f"{p['h']}x{p['w']}x{p['c']}_{p['bits']}b"
+        metrics[f"entropy_floor_bpe.{point}"] = metric(
+            p["entropy_floor_bpe"], tolerance=0.01)
+        for b in backends:
+            metrics[f"payload_bpe.{b}.{point}"] = metric(
+                p[b]["payload_bpe"], tolerance=_PAYLOAD_TOL[b])
+            metrics[f"decode_mb_s.{b}.{point}"] = metric(
+                p[b]["decode_mb_s"], better="higher", tolerance=None)
+    rec = bench_record(
+        "codec",
+        config={"seed": args.seed, "smoke": bool(args.smoke),
+                "grid": [list(g) for g in grid]},
+        metrics=metrics, raw=results)
     out = os.path.join(os.path.dirname(__file__), "BENCH_codec.json")
-    with open(out, "w") as f:
-        json.dump(results, f, indent=1)
+    write_bench(out, rec)
     print(f"wrote {out}")
     if args.smoke and not ok:
         print("ERROR: rANS payload gate failed", file=sys.stderr)

@@ -15,12 +15,23 @@ overlap, good for *ranking* bottlenecks and tracking deltas.
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --single-pod-only --json dryrun.json
     PYTHONPATH=src python -m benchmarks.roofline --json dryrun.json --md roofline.md
+
+Also writes benchmarks/BENCH_roofline.json — a schema'd ``repro-bench/1``
+record with one informational metric per (arch, shape, kind) cell, so
+``benchmarks/compare.py`` can report roofline trajectory across commits
+(cost-model quantities, never gated).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.obs.bench import bench_record, metric, write_bench  # noqa: E402
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # B/s / chip
@@ -104,6 +115,25 @@ def to_markdown(records: list[dict], chips: int = 256) -> str:
     return "\n".join(lines)
 
 
+def bench_metrics(records: list[dict], chips: int = 256) -> dict:
+    """Informational trajectory metrics: the cost model ranks bottlenecks,
+    it does not gate (tolerance None everywhere)."""
+    out: dict = {}
+    for rec in records:
+        if rec.get("status") != "ok":
+            continue
+        a = analyse(rec, chips)
+        cell = f"{rec['arch']}.{rec['shape']}.{rec.get('kind', 'train')}"
+        out[f"{cell}.bound_s"] = metric(
+            max(a["t_compute"], a["t_memory"], a["t_collective"]),
+            tolerance=None)
+        out[f"{cell}.useful_ratio"] = metric(a["useful_ratio"],
+                                             better="higher", tolerance=None)
+        out[f"{cell}.roofline_frac"] = metric(a["roofline_frac"],
+                                              better="higher", tolerance=None)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", required=True, help="dry-run records")
@@ -120,6 +150,14 @@ def main(argv=None):
         print(f"wrote {args.md}")
     else:
         print(md)
+    rec = bench_record(
+        "roofline",
+        config={"chips": args.chips, "cells": len(records)},
+        metrics=bench_metrics(records, args.chips))
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "BENCH_roofline.json")
+    write_bench(out, rec)
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -273,6 +273,40 @@ BENCHES = {
 }
 
 
+def _flatten_numeric(node, prefix="", out=None) -> dict:
+    """RESULTS tree -> flat dotted-key dict of numeric leaves; list entries
+    key by their most identifying field (C/n/consolidation) when present."""
+    out = {} if out is None else out
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten_numeric(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            tag = i
+            if isinstance(v, dict):
+                for field in ("C", "n", "consolidation"):
+                    if field in v:
+                        tag = f"{field}{v[field]}"
+                        break
+            _flatten_numeric(v, f"{prefix}.{tag}", out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+    return out
+
+
+def _write_bench_record(names: list[str]) -> None:
+    from repro.obs.bench import bench_record, metric, write_bench
+    metrics = {k: metric(v, tolerance=None)       # trained-model numbers are
+               for k, v in _flatten_numeric(RESULTS).items()}  # host/seed-
+    rec = bench_record(                           # sensitive: trajectory only
+        "paper",
+        config={"fast": FAST, "benches": names},
+        metrics=metrics)
+    path = os.path.join(os.path.dirname(__file__), "BENCH_paper.json")
+    write_bench(path, rec)
+    print(f"# wrote {path}")
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser()
@@ -286,6 +320,7 @@ def main(argv=None) -> None:
     with open(path, "w") as f:
         json.dump(RESULTS, f, indent=1)
     print(f"# wrote {path}")
+    _write_bench_record(names)
 
 
 if __name__ == '__main__':

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.codec import container as box
 from repro.codec import context as ctx
+from repro.obs import hooks
 from repro.codec.rans import (MAX_PROB_BITS, CorruptStream, RansTable,
                               encode_static, normalize_freqs)
 
@@ -82,6 +83,11 @@ def _expected_payload_bits(counts: np.ndarray, tables: list[RansTable],
 
 def encode_static_tensor(codes: np.ndarray, bits: int) -> bytes:
     """The ``rans`` backend: per-channel (or pooled) static tables."""
+    with hooks.timed("codec.encode", mode="static"):
+        return _encode_static_tensor(codes, bits)
+
+
+def _encode_static_tensor(codes: np.ndarray, bits: int) -> bytes:
     from repro.kernels.histogram import channel_histogram
 
     mat, _ = _as_symbol_matrix(codes, bits)
@@ -99,6 +105,11 @@ def encode_static_tensor(codes: np.ndarray, bits: int) -> bytes:
                                              0.0)).sum())
     payload_guess = max(1, int(ent_bits / 8) // max(n_ch, 1))
     lanes = max(1, min(STATIC_LANES, k // 32 or 1, payload_guess // 64 or 1))
+    if hooks.enabled():
+        # lane occupancy: interleave width per chunk and symbols each lane
+        # carries — how well the chunk fills the SIMD decode loop
+        hooks.observe("codec_rans_lanes", lanes, mode="static")
+        hooks.observe("codec_rans_lane_occupancy", k / lanes, mode="static")
     prob_bits = min(MAX_PROB_BITS, max(PROB_BITS_STATIC, bits + 2))
     if n_ch == 0 or k == 0:
         chunks = [(0, np.full(lanes, ctx.RANS_L, "<u4"), b"")] * n_ch
@@ -142,9 +153,18 @@ def encode_static_tensor(codes: np.ndarray, bits: int) -> bytes:
 
 def encode_adaptive_tensor(codes: np.ndarray, bits: int) -> bytes:
     """The ``rans-ctx`` backend: adaptive up-neighbor/channel context."""
+    with hooks.timed("codec.encode", mode="adaptive"):
+        return _encode_adaptive_tensor(codes, bits)
+
+
+def _encode_adaptive_tensor(codes: np.ndarray, bits: int) -> bytes:
     mat, neighbor = _as_symbol_matrix(codes, bits)
     n_ch, k = mat.shape
     lanes = ctx.plan_lanes(k, neighbor)
+    if hooks.enabled() and k:
+        hooks.observe("codec_rans_lanes", lanes, mode="adaptive")
+        hooks.observe("codec_rans_lane_occupancy", k / lanes,
+                      mode="adaptive")
     chunks = []
     for i in range(n_ch):
         states, words = ctx.encode_ctx(mat[i], bits, lanes, neighbor)
@@ -156,6 +176,11 @@ def encode_adaptive_tensor(codes: np.ndarray, bits: int) -> bytes:
 
 def decode_tensor(payload: bytes, shape: tuple, bits: int) -> np.ndarray:
     """Decode a container back to the channel-last code tensor ``shape``."""
+    with hooks.timed("codec.decode"):
+        return _decode_tensor(payload, shape, bits)
+
+
+def _decode_tensor(payload: bytes, shape: tuple, bits: int) -> np.ndarray:
     cont = box.RansContainer.parse(payload)
     h = cont.header
     if h.bits != bits:

@@ -32,6 +32,7 @@ from repro.codec import container as box
 from repro.codec import context as ctx
 from repro.codec.backend import _chunk_layout
 from repro.codec.rans import RANS_L, WORD_BITS, CorruptStream, RansTable
+from repro.obs import hooks
 
 _U64 = np.uint64
 
@@ -180,6 +181,12 @@ def decode_tensor_batch(payloads: "list[bytes]", shape: tuple,
     row i equals ``decode_tensor(payloads[i], shape, bits).ravel()`` bit for
     bit, but all compatible chunks across the whole batch share one
     interleaved decode loop."""
+    with hooks.timed("codec.decode_batch"):
+        return _decode_tensor_batch(payloads, shape, bits)
+
+
+def _decode_tensor_batch(payloads: "list[bytes]", shape: tuple,
+                         bits: int) -> np.ndarray:
     shape = tuple(shape)
     n_ch, k, _ = _chunk_layout(shape)
     count_total = int(np.prod(shape)) if shape else 1
@@ -220,12 +227,21 @@ def decode_tensor_batch(payloads: "list[bytes]", shape: tuple,
                 key = (h.lanes, h.neighbor_dist)
                 adaptive_groups.setdefault(key, []).append(
                     ((i, j), (states, words)))
+    trace_lanes = hooks.enabled()
     for (prob_bits, lanes), entries in static_groups.items():
+        if trace_lanes:
+            # effective interleave width: all grouped chunks' lanes decode
+            # in one vector pass (the whole point of the batched path)
+            hooks.observe("codec_rans_batch_width", len(entries) * lanes,
+                          mode="static")
         rows = _decode_static_group([job for _, job in entries], k,
                                     prob_bits, lanes)
         for (i, j), row in zip((pos for pos, _ in entries), rows):
             mats[i, j] = row
     for (lanes, neighbor), entries in adaptive_groups.items():
+        if trace_lanes:
+            hooks.observe("codec_rans_batch_width", len(entries) * lanes,
+                          mode="adaptive")
         rows = _decode_adaptive_group([job for _, job in entries], k, bits,
                                       lanes, neighbor)
         for (i, j), row in zip((pos for pos, _ in entries), rows):

@@ -1,0 +1,30 @@
+"""Observability for the serving stack: deterministic virtual-clock traces,
+mergeable metrics, zero-cost stage hooks, and schema'd benchmark records.
+
+  * :mod:`repro.obs.trace`   — span trees on the gateway's virtual clock,
+    exported as Chrome/Perfetto trace-event JSON; byte-identical under
+    replay with a deterministic cost model.
+  * :mod:`repro.obs.metrics` — counters, gauges, mergeable log-bucket
+    histograms; Prometheus-style text dump.
+  * :mod:`repro.obs.hooks`   — process-global ``timed``/``observe`` hooks
+    for deep pipeline/codec code; strict no-ops until a registry is
+    installed.
+  * :mod:`repro.obs.bench`   — ``BENCH_<name>.json`` schema + regression
+    comparison (driven by benchmarks/compare.py).
+
+Imports only stdlib + numpy-free modules; safe to import from anywhere in
+the package (pipeline and codec depend on it via hooks).
+"""
+from repro.obs.bench import (SCHEMA_VERSION, bench_record, compare,
+                             format_report, load_bench, metric, write_bench)
+from repro.obs.metrics import (GROWTH, Counter, Gauge, LogHistogram,
+                               MetricsRegistry)
+from repro.obs.trace import (Span, Tracer, reconcile_trace,
+                             validate_chrome_trace)
+
+__all__ = [
+    "SCHEMA_VERSION", "bench_record", "compare", "format_report",
+    "load_bench", "metric", "write_bench",
+    "GROWTH", "Counter", "Gauge", "LogHistogram", "MetricsRegistry",
+    "Span", "Tracer", "reconcile_trace", "validate_chrome_trace",
+]

@@ -1,0 +1,112 @@
+"""Zero-cost-when-disabled instrumentation hooks for deep library code.
+
+The gateway takes explicit ``tracer=`` / ``metrics=`` arguments, but stages
+buried under it — ``pipeline.plan`` encode/decode/restore, the rANS codec's
+encode/decode loops — cannot thread a registry through every call site
+without polluting the pipeline API. This module gives them a process-global
+hook instead:
+
+    from repro.obs import hooks
+    with hooks.timed("pipeline.encode", backend=op.wire_backend):
+        ...body...
+
+When no registry is installed (the default), ``timed`` returns one shared
+no-op context manager and ``observe``/``count`` return immediately after a
+single ``is None`` check — the hot path stays untouched, which is what lets
+the tracing-enabled gateway hold >=0.95x untraced throughput (the CI obs job
+gates this).
+
+Wall-clock durations recorded here go **only** into metrics histograms,
+never into the virtual-clock trace — traces stay byte-identical under
+replay (see repro.obs.trace).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+from repro.obs.metrics import MetricsRegistry
+
+_REGISTRY: MetricsRegistry | None = None
+
+
+class _NullTimer:
+    """Shared no-op timer handed out when instrumentation is disabled."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullTimer()
+
+
+class _StageTimer:
+    __slots__ = ("_hist", "_t0")
+
+    def __init__(self, hist):
+        self._hist = hist
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._hist.observe(time.perf_counter() - self._t0)
+        return False
+
+
+def install(registry: MetricsRegistry) -> None:
+    """Route stage timers/observations into ``registry`` until uninstall."""
+    global _REGISTRY
+    _REGISTRY = registry
+
+
+def uninstall() -> None:
+    global _REGISTRY
+    _REGISTRY = None
+
+
+def installed() -> MetricsRegistry | None:
+    return _REGISTRY
+
+
+def enabled() -> bool:
+    return _REGISTRY is not None
+
+
+@contextlib.contextmanager
+def active(registry: MetricsRegistry):
+    """Scoped install (benchmarks, tests): uninstalls on exit, always."""
+    install(registry)
+    try:
+        yield registry
+    finally:
+        uninstall()
+
+
+def timed(stage: str, **labels):
+    """Context manager timing its body into the ``stage_seconds`` histogram
+    labeled ``stage=...`` (wall clock). No-op when disabled."""
+    r = _REGISTRY
+    if r is None:
+        return _NULL
+    return _StageTimer(r.histogram("stage_seconds", stage=stage, **labels))
+
+
+def observe(name: str, value: float, **labels) -> None:
+    """Record one histogram observation (lane occupancy, batch widths)."""
+    r = _REGISTRY
+    if r is not None:
+        r.histogram(name, **labels).observe(value)
+
+
+def count(name: str, value: float = 1.0, **labels) -> None:
+    """Bump a counter. No-op when disabled."""
+    r = _REGISTRY
+    if r is not None:
+        r.counter(name, **labels).inc(value)

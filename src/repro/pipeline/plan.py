@@ -31,6 +31,7 @@ from repro.core import codec as wire
 from repro.core.quant import compute_quant_params, quantize
 from repro.core.split import (SplitStats, restore_codes, restore_codes_fused)
 from repro.core.tiling import tile_batch, tile_grid
+from repro.obs import hooks
 from repro.pipeline.op import OperatingPoint
 
 
@@ -168,26 +169,27 @@ class CompressionPlan:
     def encode(self, z) -> WireBlob:
         """Quantize/tile/entropy-code the split activation ``z`` (B, H, W, P)
         and serialize the container; returns the blob with wire accounting."""
-        codes, qp = self._quantize(z)
-        if self.op.tiling == "tiled":
-            # image-style codecs get the paper's tiled 2D image, one per
-            # batch element, stacked vertically
-            tiled = np.asarray(tile_batch(jnp.asarray(codes)))
-            stream = tiled.reshape(-1, tiled.shape[-1])
-        else:
-            # direct backends (rANS) code the channel-last tensor as-is
-            stream = codes
-        enc = wire.encode(stream, qp, backend=self.op.wire_backend)
-        stats = SplitStats(
-            total_bits=enc.total_bits(),
-            payload_bits=8 * len(enc.payload),
-            side_info_bits=8 * len(enc.side_info),
-            raw_bits=int(np.prod(z.shape)) * 32,
-            entropy_bits=wire.empirical_entropy_bits(codes, self.op.bits),
-            wire_bits=enc.wire_bits(),
-        )
-        return WireBlob(data=enc.to_bytes(), op=self.op,
-                        shape=tuple(codes.shape), stats=stats)
+        with hooks.timed("pipeline.encode", backend=self.op.wire_backend):
+            codes, qp = self._quantize(z)
+            if self.op.tiling == "tiled":
+                # image-style codecs get the paper's tiled 2D image, one per
+                # batch element, stacked vertically
+                tiled = np.asarray(tile_batch(jnp.asarray(codes)))
+                stream = tiled.reshape(-1, tiled.shape[-1])
+            else:
+                # direct backends (rANS) code the channel-last tensor as-is
+                stream = codes
+            enc = wire.encode(stream, qp, backend=self.op.wire_backend)
+            stats = SplitStats(
+                total_bits=enc.total_bits(),
+                payload_bits=8 * len(enc.payload),
+                side_info_bits=8 * len(enc.side_info),
+                raw_bits=int(np.prod(z.shape)) * 32,
+                entropy_bits=wire.empirical_entropy_bits(codes, self.op.bits),
+                wire_bits=enc.wire_bits(),
+            )
+            return WireBlob(data=enc.to_bytes(), op=self.op,
+                            shape=tuple(codes.shape), stats=stats)
 
     # -- decode (cloud side, host) ------------------------------------------
     def _check_blob(self, blob: WireBlob, shape: tuple) -> None:
@@ -214,23 +216,27 @@ class CompressionPlan:
         """
         if not blobs:
             raise ValueError("decode_batch needs at least one blob")
-        shape = tuple(blobs[0].shape)
-        for blob in blobs:
-            self._check_blob(blob, shape)
-        encs = [wire.EncodedTensor.from_bytes(b.data) for b in blobs]
-        streams, qps = wire.decode_many(encs)
-        n = len(blobs)
-        b, h, w, c = shape
-        if self.op.tiling == "tiled":
-            rows, cols = tile_grid(c)
-            codes = _untile_np(streams.reshape(n * b, rows * h, cols * w), c)
-        else:
-            codes = streams.reshape(n * b, h, w, c)
-        mins = np.stack([np.asarray(qp.mins, np.float16) for qp in qps])
-        maxs = np.stack([np.asarray(qp.maxs, np.float16) for qp in qps])
-        return DecodedBatch(codes=codes,
-                            mins=mins.reshape(n * b, 1, 1, c),
-                            maxs=maxs.reshape(n * b, 1, 1, c))
+        with hooks.timed("pipeline.decode_batch",
+                         backend=self.op.wire_backend):
+            hooks.observe("pipeline_decode_batch_size", len(blobs))
+            shape = tuple(blobs[0].shape)
+            for blob in blobs:
+                self._check_blob(blob, shape)
+            encs = [wire.EncodedTensor.from_bytes(b.data) for b in blobs]
+            streams, qps = wire.decode_many(encs)
+            n = len(blobs)
+            b, h, w, c = shape
+            if self.op.tiling == "tiled":
+                rows, cols = tile_grid(c)
+                codes = _untile_np(
+                    streams.reshape(n * b, rows * h, cols * w), c)
+            else:
+                codes = streams.reshape(n * b, h, w, c)
+            mins = np.stack([np.asarray(qp.mins, np.float16) for qp in qps])
+            maxs = np.stack([np.asarray(qp.maxs, np.float16) for qp in qps])
+            return DecodedBatch(codes=codes,
+                                mins=mins.reshape(n * b, 1, 1, c),
+                                maxs=maxs.reshape(n * b, 1, 1, c))
 
     # -- restore (cloud side, device) ---------------------------------------
     def restore(self, decoded: DecodedBatch):
@@ -245,17 +251,20 @@ class CompressionPlan:
                 "plan was compiled without model weights (encode/decode "
                 "only); supply params and baf_params in the ModelSpec "
                 "to restore")
-        split = self.spec.params["split"]
-        codes = jnp.asarray(decoded.codes)
-        mins = jnp.asarray(decoded.mins)
-        maxs = jnp.asarray(decoded.maxs)
-        if self.fused:
-            return restore_codes_fused(self.spec.baf_params, split,
-                                       self._sel, codes, mins, maxs,
-                                       bits=self.op.bits)
-        return restore_codes(self.spec.baf_params, split, self._sel,
-                             codes, mins, maxs, bits=self.op.bits,
-                             consolidation=self.consolidation)
+        # timer covers trace/dispatch; device completion belongs to the
+        # caller's compute measurement (the executor's wall_s blocks on it)
+        with hooks.timed("pipeline.restore", fused=self.fused):
+            split = self.spec.params["split"]
+            codes = jnp.asarray(decoded.codes)
+            mins = jnp.asarray(decoded.mins)
+            maxs = jnp.asarray(decoded.maxs)
+            if self.fused:
+                return restore_codes_fused(self.spec.baf_params, split,
+                                           self._sel, codes, mins, maxs,
+                                           bits=self.op.bits)
+            return restore_codes(self.spec.baf_params, split, self._sel,
+                                 codes, mins, maxs, bits=self.op.bits,
+                                 consolidation=self.consolidation)
 
     def __repr__(self) -> str:
         return (f"CompressionPlan(op={self.op}, fused={self.fused}, "

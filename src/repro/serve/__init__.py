@@ -4,7 +4,13 @@ batcher/telemetry).
 
 The LM engine pulls in the transformer model zoo, so it is intentionally NOT
 imported here — use ``from repro.serve.engine import ...`` directly.
+
+Observability (virtual-clock tracing, metrics registries) lives in
+:mod:`repro.obs`; the gateway accepts ``tracer=``/``metrics=`` objects from
+there. ``MetricsRegistry`` and ``Tracer`` are re-exported here for
+convenience.
 """
+from repro.obs import MetricsRegistry, Tracer
 from repro.pipeline import Capabilities, NegotiationError
 from repro.serve.batcher import (BucketKey, DecodedRequest, EncodedRequest,
                                  MicroBatch, MicroBatcher, PlanBucketKey,
@@ -48,4 +54,5 @@ __all__ = [
     "rd_table_to_json",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
     "RequestRecord", "ShedRecord", "Telemetry", "jain_fairness",
+    "MetricsRegistry", "Tracer",
 ]

@@ -63,6 +63,22 @@ class SimulatedChannel:
         self.now = 0.0                 # virtual clock (advanced by transmits)
         self._busy_until = 0.0         # wire occupied until here
         self._tick_used: dict[int, int] = {}   # tick index -> bits consumed
+        self._metrics = None           # obs.MetricsRegistry (bind_metrics)
+        self._metric_labels: dict = {}
+
+    def bind_metrics(self, registry, **labels) -> None:
+        """Mirror per-transmission accounting into an obs.MetricsRegistry
+        (``channel_transmissions_total``, ``channel_wire_bits_total``,
+        ``channel_queue_wait_seconds``), labeled e.g. ``tenant=...``.
+
+        Handles are resolved once here — ``transmit`` is on the per-request
+        hot path and must not pay a registry lookup per packet."""
+        self._metrics = registry
+        self._metric_labels = labels
+        self._m_tx = registry.counter("channel_transmissions_total", **labels)
+        self._m_bits = registry.counter("channel_wire_bits_total", **labels)
+        self._m_wait = registry.histogram("channel_queue_wait_seconds",
+                                          **labels)
 
     def reset(self) -> None:
         """Back to t=0 with the original seed — two serve runs over one
@@ -127,8 +143,13 @@ class SimulatedChannel:
         t_arrive = t_done + self.cfg.base_latency_s + jitter
         self._busy_until = t_done
         self.now = max(self.now, t_submit)
-        return Transmission(bits=bits, t_submit=t_submit, t_start=t_start,
-                            t_arrive=t_arrive)
+        tx = Transmission(bits=bits, t_submit=t_submit, t_start=t_start,
+                          t_arrive=t_arrive)
+        if self._metrics is not None:
+            self._m_tx.inc()
+            self._m_bits.inc(bits)
+            self._m_wait.observe(max(0.0, tx.queue_wait_s))
+        return tx
 
     def transmit_bytes(self, data: bytes,
                        t_submit: float | None = None) -> Transmission:

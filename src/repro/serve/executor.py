@@ -146,6 +146,8 @@ class CloudExecutor:
             raise ValueError("executor needs at least one queue")
         self.cost = cost if cost is not None else MeasuredCost()
         self.run_fn: Callable | None = None
+        self.metrics = None       # obs.MetricsRegistry: live depth gauges
+        self._gauge_cache = None  # (registry, depth gauge, per-queue gauges)
         self._template = [q.rate for q in queues]
         self._queues = queues
         self._seq = 0
@@ -184,6 +186,42 @@ class CloudExecutor:
             return 0.0
         return sum(q.busy_s for q in self._queues) / (
             span_s * len(self._queues))
+
+    def _gauge_depths(self, queue: int) -> None:
+        m = self.metrics
+        if m is not None:
+            # handle cache: submit/complete run per request, a registry
+            # lookup per event would dominate the gauge update itself
+            cache = self._gauge_cache
+            if cache is None or cache[0] is not m:
+                cache = self._gauge_cache = (
+                    m, m.gauge("executor_depth"),
+                    {i: m.gauge("executor_queue_depth", queue=i)
+                     for i in range(len(self._queues))})
+            cache[2][queue].set(self._queues[queue].depth)
+            cache[1].set(self.depth())
+
+    def export_metrics(self, registry=None, *, span_s: float | None = None):
+        """Dump per-queue counters/gauges into an obs registry.
+
+        ``span_s`` defaults to the virtual makespan of the run history, so
+        ``executor_utilization`` reports busy-seconds per queue-second over
+        the span actually served. Returns the registry written to."""
+        m = registry if registry is not None else self.metrics
+        if m is None:
+            raise ValueError("no registry: pass one or set executor.metrics")
+        if span_s is None:
+            span_s = (max(t.t_done for t in self.history)
+                      - min(t.t_submit for t in self.history)
+                      if self.history else 0.0)
+        for i, q in enumerate(self._queues):
+            m.gauge("executor_queue_depth", queue=i).set(q.depth)
+            m.gauge("executor_queue_served", queue=i).set(q.served)
+            m.gauge("executor_queue_busy_seconds", queue=i).set(q.busy_s)
+        m.gauge("executor_depth").set(self.depth())
+        m.gauge("executor_max_depth_seen").set(self.max_depth_seen)
+        m.gauge("executor_utilization").set(self.utilization(span_s))
+        return m
 
     # -- queue selection -----------------------------------------------------
     def _select_queue(self, batch, t_ready: float,
@@ -225,6 +263,7 @@ class CloudExecutor:
         self.history.append(ticket)
         self._outstanding[ticket.seq] = ticket
         self.max_depth_seen = max(self.max_depth_seen, self.depth())
+        self._gauge_depths(i)
         return ticket
 
     def on_start(self, ticket: ExecTicket) -> None:
@@ -247,6 +286,7 @@ class CloudExecutor:
         q = self._queues[ticket.queue]
         q.depth -= 1
         q.served += 1
+        self._gauge_depths(ticket.queue)
 
     def poll(self, now: float) -> list[ExecTicket]:
         """Tickets whose virtual completion time has passed, in completion

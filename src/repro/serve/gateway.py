@@ -95,6 +95,12 @@ class ServingGateway:
     executor : CloudExecutor modeling the cloud's service capacity on the
               virtual clock (None = SerialExecutor(), the single serial
               cloud of previous releases)
+    tracer : repro.obs.Tracer collecting virtual-clock span trees (None =
+              tracing off, zero per-request overhead beyond an is-None
+              check); reassignable between serve runs
+    metrics : repro.obs.MetricsRegistry shared across telemetry, executor
+              gauges, scheduler and channel counters (None = each serve
+              run's Telemetry keeps a private registry)
     """
 
     def __init__(self, params, baf_bank: dict, *,
@@ -104,7 +110,8 @@ class ServingGateway:
                  backend: str | None = None, max_batch: int = 8,
                  fused: bool = True,
                  capabilities: Capabilities | None = None,
-                 executor: CloudExecutor | None = None):
+                 executor: CloudExecutor | None = None,
+                 tracer=None, metrics=None):
         if not baf_bank:
             raise ValueError("empty BaF bank")
         self.params = params
@@ -122,7 +129,13 @@ class ServingGateway:
         self.default_op = self._fit_op(default_op)
         self.max_batch = max_batch
         self.fused = fused
+        self.tracer = tracer
+        self.metrics = metrics
         self.executor = executor if executor is not None else SerialExecutor()
+        if metrics is not None:
+            self.executor.metrics = metrics
+            if channel is not None:
+                channel.bind_metrics(metrics, tenant="")
         if self.executor.run_fn is not None:
             # each gateway binds its own batched decode+restore+forward; a
             # shared executor would silently run the last binder's plans
@@ -196,8 +209,21 @@ class ServingGateway:
 
     def _record_ticket(self, ticket: ExecTicket, responses,
                        telemetry: Telemetry) -> None:
-        """Fan one finished executor ticket out to per-request results."""
+        """Fan one finished executor ticket out to per-request results.
+
+        When a tracer is attached, each served request also emits its span
+        tree here — a ``request`` root whose children (sched.wait /
+        channel.transmit / exec.queue / cloud.compute) are built from the
+        *same* virtual-clock floats the RequestRecord holds, so per-request
+        span durations sum to ``total_latency_s`` exactly, and a batch-level
+        ``exec.batch`` span on the serving queue's track."""
+        tracer = self.tracer
         batch = ticket.batch
+        if tracer is not None:
+            tracer.span("exec.batch", ticket.t_start, ticket.t_done,
+                        track=f"exec-q{ticket.queue}", seq=ticket.seq,
+                        n_requests=len(batch.requests),
+                        padded_size=batch.padded_size)
         for row, req in enumerate(batch.requests):      # padding rows ignored
             op, stats, tx = req.meta[:3]
             out = GatewayResponse(req_id=req.req_id, logits=ticket.logits[row],
@@ -222,6 +248,26 @@ class ServingGateway:
                 sched_wait_s=(tx.t_submit - req.meta[3].t_enqueue
                               if multi_tenant else 0.0),
                 exec_queue=ticket.queue))
+            if tracer is not None:
+                t0 = req.meta[3].t_enqueue if multi_tenant else tx.t_submit
+                track = f"tenant:{req.tenant or 'default'}"
+                root = tracer.span(
+                    "request", t0, ticket.t_done, track=track,
+                    tenant=req.tenant, req_id=req.req_id, op=str(op),
+                    wire_bits=stats.wire_bits,
+                    padded_size=batch.padded_size, exec_queue=ticket.queue)
+                tracer.span("sched.wait", t0, tx.t_submit, track=track,
+                            parent=root)
+                tracer.span("channel.transmit", tx.t_submit, tx.t_arrive,
+                            track=track, parent=root,
+                            wire_bits=stats.wire_bits)
+                tracer.span("exec.queue", req.t_arrive, ticket.t_start,
+                            track=track, parent=root,
+                            exec_queue=ticket.queue)
+                tracer.span("cloud.compute", ticket.t_start, ticket.t_done,
+                            track=track, parent=root,
+                            exec_queue=ticket.queue,
+                            batch_size=len(batch.requests))
 
     # -- orchestration loop -------------------------------------------------
     def serve(self, imgs, *, submit_times=None) -> tuple[list[GatewayResponse],
@@ -245,16 +291,23 @@ class ServingGateway:
         # (the simulated link is FIFO by call, so out-of-order calls would
         # charge early requests for wire time the late ones occupied)
         inflight = []
+        tracer = self.tracer
         for i in sorted(range(n), key=lambda k: float(submit_times[k])):
-            op, blob, stats, tx = self.encode_request(imgs[i:i + 1],
-                                                      float(submit_times[i]))
+            t_submit = float(submit_times[i])
+            op, blob, stats, tx = self.encode_request(imgs[i:i + 1], t_submit)
+            if tracer is not None:
+                tracer.instant("submit", t_submit, track="tenant:default",
+                               req_id=i)
+                tracer.instant("edge.encode", t_submit, track="tenant:default",
+                               req_id=i, op=str(op),
+                               wire_bits=8 * blob.nbytes)
             inflight.append((i, op, blob, stats, tx))
         # 2. cloud side: micro-batch encoded blobs in arrival order; decode
         # runs batched per bucket inside _run_batch, scheduled by the
         # executor (tickets carry the virtual start/done times)
         inflight.sort(key=lambda item: (item[4].t_arrive, item[0]))
         responses: list[GatewayResponse | None] = [None] * n
-        telemetry = Telemetry()
+        telemetry = Telemetry(registry=self.metrics)
         batcher = MicroBatcher(max_batch=self.max_batch)
 
         def run(batch: MicroBatch) -> None:
@@ -275,6 +328,8 @@ class ServingGateway:
         for rest in batcher.flush():
             run(rest)
         assert all(r is not None for r in responses)
+        if self.metrics is not None:
+            self.executor.export_metrics(self.metrics)
         return responses, telemetry
 
 
@@ -353,11 +408,13 @@ class MultiTenantGateway(ServingGateway):
                  adaptive_window: bool = False,
                  min_window_s: float = 0.0, seed: int = 0,
                  executor: CloudExecutor | None = None,
-                 admission: AdmissionPolicy | None = None):
+                 admission: AdmissionPolicy | None = None,
+                 tracer=None, metrics=None):
         super().__init__(params, baf_bank, channel=None, controller=None,
                          default_op=default_op, backend=backend,
                          max_batch=max_batch, fused=fused,
-                         capabilities=capabilities, executor=executor)
+                         capabilities=capabilities, executor=executor,
+                         tracer=tracer, metrics=metrics)
         self.admission = admission
         specs = list(tenants)
         if not specs:
@@ -382,6 +439,9 @@ class MultiTenantGateway(ServingGateway):
                              f"budget would meter the same bits twice): "
                              f"{sorted(metered)}")
         self.channels = channels
+        if metrics is not None:
+            for name, ch in channels.items():
+                ch.bind_metrics(metrics, tenant=name)
         self.mt_controller = controller
         self._sched_args = dict(budget_bits_per_tick=budget_bits_per_tick,
                                 tick_s=tick_s, quantum_bits=quantum_bits)
@@ -420,8 +480,12 @@ class MultiTenantGateway(ServingGateway):
             self.admission.reset()
         sched = DeficitRoundRobinScheduler(self.specs.values(),
                                            **self._sched_args)
+        if self.metrics is not None:
+            sched.bind_metrics(self.metrics)
+        tracer = self.tracer
         self.last_scheduler = sched          # post-run introspection (tests,
-        telemetry = Telemetry()              # fairness/budget audits)
+        telemetry = Telemetry(               # fairness/budget audits)
+            registry=self.metrics)
         batcher = MicroBatcher(max_batch=self.max_batch,
                                window_s=self.batch_window_s,
                                adaptive=self.adaptive_window,
@@ -471,6 +535,9 @@ class MultiTenantGateway(ServingGateway):
                 spec = self.specs[w.tenant]
                 local_id = counts[w.tenant]
                 counts[w.tenant] += 1
+                if tracer is not None:
+                    tracer.instant("submit", t, track=f"tenant:{w.tenant}",
+                                   tenant=w.tenant, req_id=local_id)
                 if self.admission is not None:
                     decision = self.admission.admit(
                         tenant=w.tenant, priority=spec.priority, t=t,
@@ -486,6 +553,12 @@ class MultiTenantGateway(ServingGateway):
                         telemetry.record_shed(ShedRecord(
                             req_id=local_id, tenant=w.tenant, t_submit=t,
                             reason=decision.reason, priority=spec.priority))
+                        if tracer is not None:
+                            tracer.instant(
+                                "admission.shed", t,
+                                track=f"tenant:{w.tenant}", tenant=w.tenant,
+                                req_id=local_id, reason=decision.reason,
+                                priority=spec.priority)
                         continue
                 img = np.asarray(w.img)
                 if img.ndim == 3:
@@ -493,6 +566,11 @@ class MultiTenantGateway(ServingGateway):
                 z = self._edge_fn(self.params, img)
                 op = self._pick_tenant_op(spec, z, sched.budget_remaining(t))
                 blob = self.plan_for(op).encode(z)
+                if tracer is not None:
+                    tracer.instant("edge.encode", t,
+                                   track=f"tenant:{w.tenant}",
+                                   tenant=w.tenant, req_id=local_id,
+                                   op=str(op), wire_bits=8 * blob.nbytes)
                 # the scheduler meters the job at its true container length,
                 # so DRR shares reflect real bits on the wire
                 sched.enqueue(UplinkJob(
@@ -565,4 +643,6 @@ class MultiTenantGateway(ServingGateway):
                 f"tenant {name}: {len(got)}/{counts[name]} outcomes")
             out[name] = [got[i] for i in range(counts[name])]
         assert len(telemetry) + len(telemetry.shed) == len(workload)
+        if self.metrics is not None:
+            self.executor.export_metrics(self.metrics)
         return out, telemetry

@@ -111,6 +111,22 @@ class DeficitRoundRobinScheduler:
         self.tick_grants: dict[int, int] = {}   # tick index -> bits granted
         self._rr_start = 0
         self._order = names
+        self._metrics = None
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror grant accounting into an obs.MetricsRegistry: per-tenant
+        ``sched_granted_bits_total``/``sched_granted_jobs_total`` counters
+        and a live ``sched_backlog_jobs`` gauge.
+
+        All handles resolve once here: enqueue/grant run per request and
+        must not pay a registry lookup each time."""
+        self._metrics = registry
+        self._m_backlog = registry.gauge("sched_backlog_jobs")
+        self._m_tenant = {
+            name: (registry.counter("sched_enqueued_bits_total", tenant=name),
+                   registry.counter("sched_granted_bits_total", tenant=name),
+                   registry.counter("sched_granted_jobs_total", tenant=name))
+            for name in self._order}
 
     # -- queue side ---------------------------------------------------------
     def enqueue(self, job: UplinkJob) -> None:
@@ -121,6 +137,9 @@ class DeficitRoundRobinScheduler:
             raise ValueError(f"job bits must be > 0, got {job.bits}")
         tq.queue.append(job)
         tq.enqueued_bits += job.bits
+        if self._metrics is not None:
+            self._m_tenant[job.tenant][0].inc(job.bits)
+            self._m_backlog.set(self.pending())
 
     def pending(self) -> int:
         return sum(len(t.queue) for t in self.tenants.values())
@@ -213,6 +232,14 @@ class DeficitRoundRobinScheduler:
         self.tick_grants[tick] = self.tick_grants.get(tick, 0) + job.bits
         tq.granted_bits += job.bits
         tq.granted_jobs += 1
+        self._account_metrics(job)
+
+    def _account_metrics(self, job: UplinkJob) -> None:
+        if self._metrics is not None:
+            _, bits, jobs = self._m_tenant[job.tenant]
+            bits.inc(job.bits)
+            jobs.inc()
+            self._m_backlog.set(self.pending())
 
     def _account_spanning(self, tick: int, tq: _TenantQueue, job: UplinkJob,
                           per_tick: int) -> None:
@@ -228,6 +255,7 @@ class DeficitRoundRobinScheduler:
             tick += 1
         tq.granted_bits += job.bits
         tq.granted_jobs += 1
+        self._account_metrics(job)
 
     # -- introspection ------------------------------------------------------
     def grant_shares(self) -> dict[str, float]:

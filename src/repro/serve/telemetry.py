@@ -12,12 +12,24 @@ served records, so latency p50/p99 measure *served* requests only — an
 overloaded gateway shedding half its traffic cannot fake a good p99 (or be
 charged zero-latency phantoms). ``summary()`` reports the shed series
 alongside, as counts and a shed rate.
+
+:class:`Telemetry` is built on :class:`repro.obs.metrics.MetricsRegistry`:
+every record also lands in counters and mergeable log-bucket histograms
+(``gateway_requests_total``, ``gateway_request_latency_seconds{tenant=...}``,
+...), dumpable as Prometheus text via ``telemetry.metrics``. By default the
+full record list is kept and percentiles stay the exact numpy computation;
+pass ``max_records=N`` to bound memory on long runs — the list caps at N
+while counts/sums/percentiles keep covering *every* record through the
+registry aggregates (percentiles then carry the histogram's bucket
+tolerance, ~9% relative at the default growth; see repro.obs.metrics).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.obs.metrics import LogHistogram, MetricsRegistry
 
 
 @dataclass(frozen=True)
@@ -60,24 +72,96 @@ def jain_fairness(values) -> float:
     return float(np.sum(v) ** 2 / (v.size * np.sum(v * v)))
 
 
+# histogram series a truncated Telemetry can still answer percentiles from
+_HIST_FIELDS = {
+    "total_latency_s": "gateway_request_latency_seconds",
+    "compute_s": "gateway_compute_seconds",
+    "queue_wait_s": "gateway_queue_wait_seconds",
+}
+
+
+class _TenantAgg:
+    """Running per-tenant aggregates + cached registry series handles (one
+    key construction per tenant, not per record)."""
+    __slots__ = ("count", "bits", "sched_sum", "batch_sum", "ops",
+                 "c_req", "c_bits", "hists")
+
+    def __init__(self, metrics: MetricsRegistry, tenant: str):
+        self.count = 0
+        self.bits = 0
+        self.sched_sum = 0.0
+        self.batch_sum = 0.0
+        self.ops: set[tuple[int, int]] = set()
+        self.c_req = metrics.counter("gateway_requests_total", tenant=tenant)
+        self.c_bits = metrics.counter("gateway_wire_bits_total",
+                                      tenant=tenant)
+        self.hists = {f: metrics.histogram(name, tenant=tenant)
+                      for f, name in _HIST_FIELDS.items()}
+
+
 class Telemetry:
     """Accumulates request records and reports aggregate percentiles.
 
     Served requests (``records``) and admission rejections (``shed``) are
-    separate series; ``__len__``/``percentile`` cover served only."""
+    separate series; ``__len__``/``percentile`` cover served only.
 
-    def __init__(self):
+    Parameters
+    ----------
+    registry : share an existing :class:`MetricsRegistry` (the gateway
+        passes its own so request series land beside executor/scheduler
+        gauges); None = a private registry
+    max_records : cap on the stored record list (None = keep every record,
+        the exact-percentile default). Aggregates always cover all records.
+    """
+
+    def __init__(self, *, registry: MetricsRegistry | None = None,
+                 max_records: int | None = None):
+        if max_records is not None and max_records < 1:
+            raise ValueError(f"max_records must be >= 1, got {max_records}")
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.max_records = max_records
         self.records: list[RequestRecord] = []
         self.shed: list[ShedRecord] = []
+        self._n = 0
+        self._tenant: dict[str, _TenantAgg] = {}
+
+    @property
+    def truncated(self) -> bool:
+        """True when the record list stopped growing at ``max_records``
+        (aggregate counts/sums/histograms still cover everything)."""
+        return self._n > len(self.records)
+
+    def _agg(self, tenant: str) -> _TenantAgg:
+        agg = self._tenant.get(tenant)
+        if agg is None:
+            agg = _TenantAgg(self.metrics, tenant)
+            self._tenant[tenant] = agg
+        return agg
 
     def record(self, rec: RequestRecord) -> None:
-        self.records.append(rec)
+        if self.max_records is None or len(self.records) < self.max_records:
+            self.records.append(rec)
+        self._n += 1
+        agg = self._agg(rec.tenant)
+        agg.count += 1
+        agg.bits += rec.bits_on_wire
+        agg.sched_sum += rec.sched_wait_s
+        agg.batch_sum += rec.batch_size
+        agg.ops.add((rec.c, rec.bits))
+        agg.c_req.inc()
+        agg.c_bits.inc(rec.bits_on_wire)
+        for field_name, hist in agg.hists.items():
+            # virtual-clock records can carry tiny negative waits (a ticket
+            # may start a hair before the packet's nominal arrival in the
+            # adaptive-window path); latency histograms clamp at zero
+            hist.observe(max(0.0, getattr(rec, field_name)))
 
     def record_shed(self, rec: ShedRecord) -> None:
         self.shed.append(rec)
+        self.metrics.counter("gateway_shed_total", tenant=rec.tenant).inc()
 
     def __len__(self) -> int:
-        return len(self.records)
+        return self._n            # true served count, even when truncated
 
     def shed_by_tenant(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -87,19 +171,56 @@ class Telemetry:
 
     def shed_rate(self) -> float:
         """Fraction of all submissions that were shed (0.0 when none)."""
-        total = len(self.records) + len(self.shed)
+        total = self._n + len(self.shed)
         return len(self.shed) / total if total else 0.0
+
+    # -- percentiles ---------------------------------------------------------
+    def _hist_percentile(self, field_name: str, p: float,
+                         tenant: str | None) -> float:
+        name = _HIST_FIELDS.get(field_name)
+        if name is None:
+            raise ValueError(
+                f"record history truncated at max_records="
+                f"{self.max_records}; histogram percentiles cover only "
+                f"{sorted(_HIST_FIELDS)}, not {field_name!r}")
+        if tenant is None:
+            hists = [a.hists[field_name] for a in self._tenant.values()]
+            h = hists[0] if len(hists) == 1 else LogHistogram.merged(hists)
+        else:
+            agg = self._tenant.get(tenant)
+            h = agg.hists[field_name] if agg is not None else None
+        if h is None or h.count == 0:
+            raise ValueError(self._no_records_msg(tenant))
+        return h.percentile(p)
+
+    def _no_records_msg(self, tenant: str | None) -> str:
+        scope = f"tenant {tenant!r}" if tenant is not None else "telemetry"
+        msg = f"no served records in {scope}"
+        if self.shed:
+            msg += (f" ({len(self.shed)} shed by admission — the shed "
+                    f"series has no latency percentiles)")
+        return msg
 
     def percentile(self, field_name: str, p: float,
                    tenant: str | None = None) -> float:
+        """Percentile of ``field_name`` over served records.
+
+        Exact (numpy, linear interpolation) while the full record list is
+        retained; within histogram bucket tolerance once truncated. A single
+        record reports itself at every percentile; no served records raises
+        ValueError naming the shed count instead of returning NaN."""
+        if self.truncated:
+            return self._hist_percentile(field_name, p, tenant)
         vals = [getattr(r, field_name) for r in self.records
                 if tenant is None or r.tenant == tenant]
         if not vals:
-            raise ValueError("no records")
+            raise ValueError(self._no_records_msg(tenant))
+        if len(vals) == 1:
+            return float(vals[0])
         return float(np.percentile(np.asarray(vals, np.float64), p))
 
     def tenants(self) -> list[str]:
-        return sorted({r.tenant for r in self.records})
+        return sorted(self._tenant)
 
     def per_tenant(self) -> dict[str, dict]:
         """{tenant: summary} over each tenant's own records.
@@ -113,58 +234,77 @@ class Telemetry:
         shed = self.shed_by_tenant()
         out = {}
         for t in sorted(set(self.tenants()) | set(shed)):
-            recs = [r for r in self.records if r.tenant == t]
-            lat = [r.total_latency_s for r in recs]
-            out[t] = {
-                "count": len(recs),
+            agg = self._tenant.get(t)
+            count = agg.count if agg is not None else 0
+            row = {
+                "count": count,
                 "shed": shed.get(t, 0),
-                "bits_on_wire": int(sum(r.bits_on_wire for r in recs)),
-                "p50_latency_s": (float(np.percentile(lat, 50))
-                                  if recs else None),
-                "p99_latency_s": (float(np.percentile(lat, 99))
-                                  if recs else None),
-                "mean_sched_wait_s": (float(np.mean(
-                    [r.sched_wait_s for r in recs])) if recs else None),
-                "operating_points": sorted({(r.c, r.bits) for r in recs}),
+                "bits_on_wire": int(agg.bits) if agg is not None else 0,
+                "p50_latency_s": None,
+                "p99_latency_s": None,
+                "mean_sched_wait_s": None,
+                "operating_points": sorted(agg.ops) if agg is not None
+                else [],
             }
+            if count:
+                row["p50_latency_s"] = self.percentile(
+                    "total_latency_s", 50, tenant=t)
+                row["p99_latency_s"] = self.percentile(
+                    "total_latency_s", 99, tenant=t)
+                row["mean_sched_wait_s"] = agg.sched_sum / count
+            out[t] = row
         return out
 
     def fairness(self, field_name: str = "bits_on_wire") -> float:
         """Jain's index over per-tenant sums of ``field_name`` (1 = fair)."""
-        per = {}
+        if field_name == "bits_on_wire":
+            # aggregate path: exact regardless of record truncation
+            return jain_fairness(a.bits for a in self._tenant.values())
+        if self.truncated:
+            raise ValueError(
+                f"record history truncated at max_records="
+                f"{self.max_records}; fairness over {field_name!r} needs "
+                f"the full record list (bits_on_wire stays available)")
+        per: dict[str, float] = {}
         for r in self.records:
             per[r.tenant] = per.get(r.tenant, 0.0) + getattr(r, field_name)
         return jain_fairness(per.values())
 
+    # -- aggregate views -----------------------------------------------------
     def summary(self, *, wall_s: float | None = None) -> dict:
         """Aggregate view; pass the measured wall time for requests/sec.
 
         Latency percentiles cover served requests only; the shed series is
-        summarized separately (``shed``/``shed_rate``)."""
-        if not self.records:
+        summarized separately (``shed``/``shed_rate``). An empty served
+        series with a non-empty shed series reports counts (not a crash and
+        not phantom zero latencies)."""
+        if self._n == 0:
             out = {"count": 0}
             if self.shed:
                 out.update({"shed": len(self.shed), "shed_rate": 1.0,
                             "shed_by_tenant": self.shed_by_tenant()})
             return out
+        total_bits = sum(a.bits for a in self._tenant.values())
+        total_batch = sum(a.batch_sum for a in self._tenant.values())
+        ops = set()
+        for a in self._tenant.values():
+            ops |= a.ops
         out = {
-            "count": len(self.records),
-            "mean_bits_on_wire": float(np.mean([r.bits_on_wire
-                                                for r in self.records])),
-            "mean_batch_size": float(np.mean([r.batch_size
-                                              for r in self.records])),
+            "count": self._n,
+            "mean_bits_on_wire": total_bits / self._n,
+            "mean_batch_size": total_batch / self._n,
             "p50_latency_s": self.percentile("total_latency_s", 50),
             "p99_latency_s": self.percentile("total_latency_s", 99),
             "p50_compute_s": self.percentile("compute_s", 50),
             "p99_compute_s": self.percentile("compute_s", 99),
-            "operating_points": sorted({(r.c, r.bits) for r in self.records}),
+            "operating_points": sorted(ops),
         }
         if self.shed:
             out["shed"] = len(self.shed)
             out["shed_rate"] = self.shed_rate()
             out["shed_by_tenant"] = self.shed_by_tenant()
         if wall_s is not None and wall_s > 0:
-            out["requests_per_s"] = len(self.records) / wall_s
+            out["requests_per_s"] = self._n / wall_s
         tenants = self.tenants()
         if len(tenants) > 1 or (tenants and tenants != [""]):
             out["tenants"] = tenants

@@ -1,0 +1,191 @@
+"""Schema'd benchmark records and the trajectory gate
+(repro.obs.bench + the benchmarks/compare.py CLI)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import repro
+from repro.obs import (SCHEMA_VERSION, bench_record, compare, format_report,
+                       load_bench, metric, write_bench)
+from repro.obs.bench import validate_record
+
+
+def _rec(name="demo", *, config=None, metrics=None):
+    return bench_record(
+        name,
+        config=config if config is not None else {"smoke": True},
+        metrics=metrics if metrics is not None else {
+            "lat": metric(1.0, tolerance=0.1),
+        })
+
+
+def test_record_roundtrip(tmp_path):
+    rec = _rec(metrics={"lat": metric(1.5, tolerance=0.1),
+                        "tp": metric(100, better="higher", tolerance=None)})
+    p = tmp_path / "BENCH_demo.json"
+    write_bench(p, rec)
+    back = load_bench(p)
+    assert back == rec
+    assert back["schema"] == SCHEMA_VERSION
+    assert back["metrics"]["tp"]["tolerance"] is None
+
+
+def test_schema_rejection(tmp_path):
+    for bad in (
+        {"schema": "nope/9", "name": "x", "config": {}, "metrics": {}},
+        {"schema": SCHEMA_VERSION, "name": "", "config": {}, "metrics": {}},
+        {"schema": SCHEMA_VERSION, "name": "x", "metrics": {}},
+        {"schema": SCHEMA_VERSION, "name": "x", "config": {},
+         "metrics": {"m": {"no_value": 1}}},
+        {"schema": SCHEMA_VERSION, "name": "x", "config": {},
+         "metrics": {"m": {"value": 1, "better": "sideways"}}},
+        {"schema": SCHEMA_VERSION, "name": "x", "config": {},
+         "metrics": {"m": {"value": 1, "tolerance": -0.5}}},
+        [1, 2, 3],
+    ):
+        with pytest.raises(ValueError):
+            validate_record(bad)
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "nope"}))
+    with pytest.raises(ValueError):
+        load_bench(p)
+
+
+def test_metric_constructor_validation():
+    with pytest.raises(ValueError, match="better"):
+        metric(1.0, better="sideways")
+    with pytest.raises(ValueError, match="tolerance"):
+        metric(1.0, tolerance=-1)
+
+
+def test_regression_directions():
+    base = _rec(metrics={"lat": metric(1.0, tolerance=0.1),
+                         "tp": metric(100.0, better="higher",
+                                      tolerance=0.1)})
+    # lower-is-better metric grows past tolerance -> regressed
+    cur = _rec(metrics={"lat": metric(1.2, tolerance=0.1),
+                        "tp": metric(100.0, better="higher", tolerance=0.1)})
+    ok, deltas = compare(cur, base)
+    assert not ok
+    assert {d.key: d.status for d in deltas}["lat"] == "regressed"
+    # higher-is-better metric shrinking past tolerance -> regressed
+    cur = _rec(metrics={"lat": metric(1.0, tolerance=0.1),
+                        "tp": metric(80.0, better="higher", tolerance=0.1)})
+    ok, deltas = compare(cur, base)
+    assert not ok
+    assert {d.key: d.status for d in deltas}["tp"] == "regressed"
+    # inside tolerance both ways -> ok
+    cur = _rec(metrics={"lat": metric(1.05, tolerance=0.1),
+                        "tp": metric(95.0, better="higher", tolerance=0.1)})
+    ok, deltas = compare(cur, base)
+    assert ok
+    assert all(d.status == "ok" for d in deltas)
+
+
+def test_improvement_reported_and_passes():
+    base = _rec(metrics={"lat": metric(1.0, tolerance=0.1)})
+    cur = _rec(metrics={"lat": metric(0.5, tolerance=0.1)})
+    ok, deltas = compare(cur, base)
+    assert ok
+    assert deltas[0].status == "improved"
+
+
+def test_informational_never_fails():
+    base = _rec(metrics={"wall": metric(1.0, tolerance=None)})
+    cur = _rec(metrics={"wall": metric(50.0, tolerance=None)})
+    ok, deltas = compare(cur, base)
+    assert ok
+    assert deltas[0].status == "info"
+
+
+def test_baseline_tolerance_gates_not_current():
+    # the current record claims a loose tolerance; the baseline's tight one
+    # must still gate
+    base = _rec(metrics={"lat": metric(1.0, tolerance=0.01)})
+    cur = _rec(metrics={"lat": metric(1.5, tolerance=9.9)})
+    ok, _ = compare(cur, base)
+    assert not ok
+
+
+def test_missing_gated_metric_fails():
+    base = _rec(metrics={"lat": metric(1.0, tolerance=0.1),
+                         "wall": metric(2.0, tolerance=None)})
+    cur = _rec(metrics={})
+    ok, deltas = compare(cur, base)
+    assert not ok
+    st = {d.key: d.status for d in deltas}
+    assert st["lat"] == "missing"          # gated: fails
+    assert st["wall"] == "info"            # informational: reported only
+
+
+def test_new_metric_reported_ok():
+    base = _rec(metrics={"lat": metric(1.0, tolerance=0.1)})
+    cur = _rec(metrics={"lat": metric(1.0, tolerance=0.1),
+                        "extra": metric(5.0)})
+    ok, deltas = compare(cur, base)
+    assert ok
+    assert {d.key: d.status for d in deltas}["extra"] == "new"
+
+
+def test_name_mismatch_fails():
+    ok, deltas = compare(_rec("a"), _rec("b"))
+    assert not ok and deltas[0].status == "name-mismatch"
+
+
+def test_config_drift():
+    base = _rec(config={"smoke": True, "requests": 32})
+    cur = _rec(config={"smoke": False, "requests": 32})
+    ok, deltas = compare(cur, base)
+    assert not ok
+    assert any(d.status == "config-drift" for d in deltas)
+    ok, deltas = compare(cur, base, allow_config_drift=True)
+    assert ok
+    assert any(d.key == "config.smoke" and d.status == "info"
+               for d in deltas)
+
+
+def test_zero_baseline_compares_absolutely():
+    base = _rec(metrics={"err": metric(0.0, tolerance=1e-9)})
+    ok, _ = compare(_rec(metrics={"err": metric(5e-10, tolerance=1e-9)}),
+                    base)
+    assert ok
+    ok, deltas = compare(_rec(metrics={"err": metric(1e-6, tolerance=1e-9)}),
+                         base)
+    assert not ok and deltas[0].status == "regressed"
+
+
+def test_format_report_mentions_failures():
+    ok, deltas = compare(
+        _rec(metrics={"lat": metric(9.0, tolerance=0.1)}),
+        _rec(metrics={"lat": metric(1.0, tolerance=0.1)}))
+    text = format_report(deltas)
+    assert "REGRESSED" in text and "lat" in text and "summary:" in text
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    # repro is a namespace package (no __init__.py): locate via __path__
+    src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    repo = os.path.dirname(src_dir)
+    cli = os.path.join(repo, "benchmarks", "compare.py")
+    base_p, good_p, bad_p = (tmp_path / n for n in
+                             ("base.json", "good.json", "bad.json"))
+    write_bench(base_p, _rec(metrics={"lat": metric(1.0, tolerance=0.1)}))
+    write_bench(good_p, _rec(metrics={"lat": metric(1.0, tolerance=0.1)}))
+    write_bench(bad_p, _rec(metrics={"lat": metric(9.0, tolerance=0.1)}))
+    env = dict(os.environ, PYTHONPATH=src_dir)
+
+    def run(*argv):
+        return subprocess.run([sys.executable, cli, *argv],
+                              capture_output=True, text=True, env=env)
+
+    r = run("--current", str(good_p), "--baseline", str(base_p))
+    assert r.returncode == 0, r.stderr
+    assert "PASS" in r.stdout
+    r = run("--current", str(bad_p), "--baseline", str(base_p))
+    assert r.returncode == 1
+    assert "REGRESSED" in r.stdout and "FAIL" in r.stdout
+    r = run("--check", str(base_p))
+    assert r.returncode == 0 and "valid" in r.stdout
