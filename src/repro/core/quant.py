@@ -51,8 +51,14 @@ def compute_quant_params(x: jax.Array, bits: int, *,
         mins = jnp.min(x, axis=reduce_axes).astype(jnp.float16)
         maxs = jnp.max(x, axis=reduce_axes).astype(jnp.float16)
     # fp16 rounding of the max can land *below* a data point; widen to the
-    # next representable so codes never exceed 2^n - 1.
-    maxs = jnp.maximum(maxs, jnp.nextafter(maxs, jnp.array(jnp.inf, jnp.float16)))
+    # next representable so codes never exceed 2^n - 1. Saturate at the finite
+    # fp16 extremes: nextafter(±65504) and the cast of out-of-range values are
+    # ±inf, and an infinite range zeroes every code and dequantizes to NaN.
+    f16_max = jnp.asarray(65504.0, jnp.float16)
+    mins = jnp.maximum(mins, -f16_max)
+    maxs = jnp.minimum(
+        jnp.maximum(maxs, jnp.nextafter(maxs, jnp.asarray(jnp.inf, jnp.float16))),
+        f16_max)
     return QuantParams(mins=mins, maxs=maxs, bits=bits)
 
 

@@ -37,9 +37,15 @@ def _quantize_stream(x: jax.Array, bits: int):
     stats over all leading dims (one side-info row per transfer)."""
     levels = (1 << bits) - 1
     axes = tuple(range(x.ndim - 1))
-    mn = jnp.min(x, axis=axes).astype(jnp.float16)
+    # widen the fp16-rounded max to the next representable, saturating at
+    # finite fp16 (±65504): an inf bound zeroes every code and restores NaN
+    # on the receiving pod (same fix as core/quant + kernels/quantize).
+    f16_max = jnp.asarray(65504.0, jnp.float16)
+    mn = jnp.maximum(jnp.min(x, axis=axes).astype(jnp.float16), -f16_max)
     mx = jnp.max(x, axis=axes).astype(jnp.float16)
-    mx = jnp.maximum(mx, jnp.nextafter(mx, jnp.asarray(jnp.inf, jnp.float16)))
+    mx = jnp.minimum(
+        jnp.maximum(mx, jnp.nextafter(mx, jnp.asarray(jnp.inf, jnp.float16))),
+        f16_max)
     m = mn.astype(jnp.float32)
     rng = jnp.maximum(mx.astype(jnp.float32) - m, 1e-12)
     scaled = (x.astype(jnp.float32) - m) / rng * levels

@@ -29,10 +29,14 @@ def _quantize_kernel(x_ref, codes_ref, mins_ref, maxs_ref, *, levels: int):
     mn = jnp.min(x, axis=0)                             # (BC,)
     mx = jnp.max(x, axis=0)
     # paper §3.2: side info is fp16; widen the max to the next representable
-    # so fp16 rounding can never push a data point above the top code.
-    mn16 = mn.astype(jnp.float16)
+    # so fp16 rounding can never push a data point above the top code, but
+    # saturate at finite fp16 — an inf bound zeroes every code and restores NaN.
+    f16_max = jnp.asarray(65504.0, jnp.float16)
+    mn16 = jnp.maximum(mn.astype(jnp.float16), -f16_max)
     mx16 = mx.astype(jnp.float16)
-    mx16 = jnp.maximum(mx16, jnp.nextafter(mx16, jnp.asarray(jnp.inf, jnp.float16)))
+    mx16 = jnp.minimum(
+        jnp.maximum(mx16, jnp.nextafter(mx16, jnp.asarray(jnp.inf, jnp.float16))),
+        f16_max)
     m = mn16.astype(jnp.float32)
     rng = jnp.maximum(mx16.astype(jnp.float32) - m, 1e-12)
     scaled = (x - m[None, :]) / rng[None, :] * levels

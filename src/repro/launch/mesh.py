@@ -14,9 +14,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_dev_mesh(n_devices: int | None = None):
-    """Small mesh over whatever devices exist (tests / examples)."""
+def make_dev_mesh(n_devices: int | None = None, *, prefer: str = "model"):
+    """Small mesh over whatever devices exist (tests / examples).
+
+    prefer="model" (default, train/dry-run): give the model axis the largest
+    factor of n in (4, 2, 1) — a 4-device host becomes (data=1, model=4).
+    prefer="data" (serving): all devices on the batch axis, (data=n, model=1)
+    — the shape the batch-parallel cloud tier (serve.mesh_executor) wants.
+    """
     n = n_devices or len(jax.devices())
+    if prefer == "data":
+        return jax.make_mesh((n, 1), ("data", "model"))
+    if prefer != "model":
+        raise ValueError(f"prefer must be 'data' or 'model', got {prefer!r}")
     model = 1
     for m in (4, 2, 1):
         if n % m == 0:

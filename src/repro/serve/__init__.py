@@ -17,15 +17,17 @@ from repro.serve.batcher import (BucketKey, DecodedRequest, EncodedRequest,
                                  bucket_sizes)
 from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
 from repro.serve.executor import (AdmissionDecision, AdmissionPolicy,
-                                  AlwaysAdmit, CloudExecutor,
-                                  CompositeAdmission, CostModel, ExecTicket,
-                                  LinearCostModel, MeasuredCost,
-                                  MultiQueueExecutor, QueueDepthAdmission,
-                                  RequestShed, SerialExecutor,
-                                  TokenBucketAdmission,
+                                  AlwaysAdmit, CalibratedCostModel,
+                                  CloudExecutor, CompositeAdmission,
+                                  CostModel, ExecTicket, LinearCostModel,
+                                  MeasuredCost, MultiQueueExecutor,
+                                  QueueDepthAdmission, RequestShed,
+                                  SerialExecutor, TokenBucketAdmission,
                                   priority_depth_limits)
-from repro.serve.gateway import (GatewayResponse, MultiTenantGateway,
-                                 ServingGateway, TenantRequest)
+from repro.serve.gateway import (GatewayFederation, GatewayResponse,
+                                 MultiTenantGateway, ServingGateway,
+                                 TenantRequest, serve_federated)
+from repro.serve.mesh_executor import MeshExecutor, seed_cost_from_hlo
 from repro.serve.rate_control import (ContentKeyedController,
                                       OperatingPoint, RateController,
                                       RDPoint, build_rd_table,
@@ -42,13 +44,15 @@ __all__ = [
     "MicroBatcher", "PlanBucketKey", "bucket_sizes",
     "Capabilities", "NegotiationError",
     "ChannelConfig", "SimulatedChannel", "Transmission",
-    "AdmissionDecision", "AdmissionPolicy", "AlwaysAdmit", "CloudExecutor",
-    "CompositeAdmission", "CostModel", "ExecTicket", "LinearCostModel",
-    "MeasuredCost", "MultiQueueExecutor", "QueueDepthAdmission",
+    "AdmissionDecision", "AdmissionPolicy", "AlwaysAdmit",
+    "CalibratedCostModel", "CloudExecutor", "CompositeAdmission",
+    "CostModel", "ExecTicket", "LinearCostModel", "MeasuredCost",
+    "MeshExecutor", "MultiQueueExecutor", "QueueDepthAdmission",
     "RequestShed", "SerialExecutor", "TokenBucketAdmission",
-    "priority_depth_limits",
-    "GatewayResponse", "MultiTenantGateway", "ServingGateway",
-    "TenantRequest", "ContentKeyedController", "OperatingPoint",
+    "priority_depth_limits", "seed_cost_from_hlo",
+    "GatewayFederation", "GatewayResponse", "MultiTenantGateway",
+    "ServingGateway", "TenantRequest", "serve_federated",
+    "ContentKeyedController", "OperatingPoint",
     "RateController", "RDPoint", "build_rd_table", "codec_revision",
     "load_or_build_rd_table", "rd_grid", "rd_table_from_json",
     "rd_table_to_json",

@@ -142,7 +142,10 @@ class SimulatedChannel:
         t_done = max(t_start + serialization, granted_by)
         t_arrive = t_done + self.cfg.base_latency_s + jitter
         self._busy_until = t_done
-        self.now = max(self.now, t_submit)
+        # advance the clock through the whole transmission: the no-arg
+        # budget_remaining() must read the tick the wire is committed to,
+        # not a tick it already blew past.
+        self.now = max(self.now, t_done)
         tx = Transmission(bits=bits, t_submit=t_submit, t_start=t_start,
                           t_arrive=t_arrive)
         if self._metrics is not None:

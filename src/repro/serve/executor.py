@@ -74,6 +74,90 @@ class LinearCostModel(CostModel):
         return self.base_s + self.per_item_s * batch.padded_size
 
 
+class CalibratedCostModel(CostModel):
+    """Affine cost **fit from measured compute** — calibrate, freeze, replay.
+
+    Life cycle:
+
+      1. *Calibrating* (``frozen=False``): every ``duration_s`` call records a
+         ``(padded_size, wall_s)`` sample and returns the measured wall time
+         (behaves like :class:`MeasuredCost`). Drive a warm executor through
+         a spread of batch sizes to collect the samples.
+      2. ``freeze()``: least-squares affine fit ``base_s + per_item_s * n``
+         over the samples (coefficients clamped >= 0; degenerate sample sets
+         fall back to the seed coefficients, e.g. roofline estimates from
+         ``launch/hlo_cost``).
+      3. *Frozen*: ``duration_s`` is a pure function of ``padded_size`` —
+         the virtual clock depends only on the workload, so two runs replay
+         bit-identically, like :class:`LinearCostModel` but with constants
+         the hardware chose.
+
+    Calibrate on warm compute only: a sample that includes jit compilation
+    poisons the fit.
+    """
+
+    def __init__(self, *, seed_base_s: float = 0.0,
+                 seed_per_item_s: float = 0.0):
+        if seed_base_s < 0 or seed_per_item_s < 0:
+            raise ValueError("seed coefficients must be >= 0")
+        self.seed_base_s = float(seed_base_s)
+        self.seed_per_item_s = float(seed_per_item_s)
+        self.base_s = self.seed_base_s
+        self.per_item_s = self.seed_per_item_s
+        self.samples: list[tuple[int, float]] = []
+        self.frozen = False
+
+    def observe(self, n_items: int, wall_s: float) -> None:
+        if self.frozen:
+            raise RuntimeError("frozen CalibratedCostModel takes no samples")
+        self.samples.append((int(n_items), float(wall_s)))
+
+    def duration_s(self, batch, measured_s: float) -> float:
+        if self.frozen:
+            return self.predict(batch.padded_size)
+        self.observe(batch.padded_size, measured_s)
+        return measured_s
+
+    def predict(self, n_items: int) -> float:
+        return self.base_s + self.per_item_s * n_items
+
+    def fit(self) -> tuple[float, float]:
+        """Closed-form least squares over the samples -> (base_s, per_item_s).
+
+        Needs >= 2 distinct batch sizes to separate the intercept from the
+        slope; with fewer, the seed slope is kept and only the intercept is
+        adjusted to the sample mean."""
+        if not self.samples:
+            return self.base_s, self.per_item_s
+        ns = [float(n) for n, _ in self.samples]
+        ys = [y for _, y in self.samples]
+        k = len(ns)
+        n_mean = sum(ns) / k
+        y_mean = sum(ys) / k
+        var = sum((n - n_mean) ** 2 for n in ns)
+        if var > 0:
+            cov = sum((n - n_mean) * (y - y_mean) for n, y in zip(ns, ys))
+            per_item = max(cov / var, 0.0)
+        else:
+            per_item = self.seed_per_item_s
+        base = max(sum(y - per_item * n for n, y in zip(ns, ys)) / k, 0.0)
+        self.base_s, self.per_item_s = base, per_item
+        return base, per_item
+
+    def freeze(self) -> "CalibratedCostModel":
+        """Fit (if samples were collected) and pin the coefficients."""
+        if not self.frozen:
+            self.fit()
+            self.frozen = True
+        return self
+
+    def fit_rel_err(self) -> float:
+        """Mean |predicted - measured| / measured over the calibration
+        samples — the acceptance gate asks this to stay within 0.25."""
+        errs = [abs(self.predict(n) - y) / y for n, y in self.samples if y > 0]
+        return sum(errs) / len(errs) if errs else 0.0
+
+
 # ---------------------------------------------------------------------------
 # Tickets
 # ---------------------------------------------------------------------------
@@ -241,14 +325,25 @@ class CloudExecutor:
         return i, start, dur
 
     # -- protocol ------------------------------------------------------------
-    def submit(self, batch, t_ready: float) -> ExecTicket:
-        """Run the real compute and plan the batch onto the virtual clock."""
-        if self.run_fn is None:
+    def _plan_duration(self, batch, wall_s: float) -> float:
+        """Virtual service duration for one batch. Subclass hook — the mesh
+        executor evaluates the cost model at its per-shard row count."""
+        return self.cost.duration_s(batch, wall_s)
+
+    def submit(self, batch, t_ready: float, *,
+               run_fn: Callable | None = None) -> ExecTicket:
+        """Run the real compute and plan the batch onto the virtual clock.
+
+        ``run_fn`` overrides the bound callable for this submission — how
+        federated gateways share one executor while each supplying their own
+        batched decode+restore+forward."""
+        run = run_fn if run_fn is not None else self.run_fn
+        if run is None:
             raise RuntimeError("executor has no bound run_fn (the gateway "
                                "binds its batched decode+restore+forward at "
                                "construction)")
-        logits, wall_s = self.run_fn(batch)
-        duration = self.cost.duration_s(batch, wall_s)
+        logits, wall_s = run(batch)
+        duration = self._plan_duration(batch, wall_s)
         i, start, dur = self._select_queue(batch, t_ready, duration)
         q = self._queues[i]
         q.busy_until = start + dur

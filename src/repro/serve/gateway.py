@@ -111,6 +111,7 @@ class ServingGateway:
                  fused: bool = True,
                  capabilities: Capabilities | None = None,
                  executor: CloudExecutor | None = None,
+                 shared_executor: bool = False,
                  tracer=None, metrics=None):
         if not baf_bank:
             raise ValueError("empty BaF bank")
@@ -132,18 +133,34 @@ class ServingGateway:
         self.tracer = tracer
         self.metrics = metrics
         self.executor = executor if executor is not None else SerialExecutor()
+        if shared_executor and executor is None:
+            raise ValueError("shared_executor=True needs the shared executor "
+                             "passed explicitly")
+        self.shared_executor = shared_executor
         if metrics is not None:
-            self.executor.metrics = metrics
+            if not shared_executor:
+                self.executor.metrics = metrics
             if channel is not None:
                 channel.bind_metrics(metrics, tenant="")
-        if self.executor.run_fn is not None:
-            # each gateway binds its own batched decode+restore+forward; a
-            # shared executor would silently run the last binder's plans
-            # against every gateway's blobs (and each serve() resets the
-            # other's queues mid-use)
-            raise ValueError("executor is already bound to another gateway; "
-                             "construct one executor per gateway")
-        self.executor.run_fn = self._run_batch
+        # a mesh-capable executor (duck-typed on run_sharded) takes restore +
+        # cloud forward through its shard_map runner; plain executors run the
+        # whole batch inline here
+        self._run_fn = (self._run_batch_mesh
+                        if callable(getattr(self.executor, "run_sharded",
+                                            None))
+                        else self._run_batch)
+        if not shared_executor:
+            if self.executor.run_fn is not None:
+                # an exclusively-owned executor binds one gateway's batched
+                # decode+restore+forward; a second binder would silently run
+                # the first gateway's plans against its own blobs (and each
+                # serve() resets the other's queues mid-use). Federations
+                # pass shared_executor=True and supply run_fn per submit.
+                raise ValueError("executor is already bound to another "
+                                 "gateway; construct one executor per "
+                                 "gateway (or build every gateway with "
+                                 "shared_executor=True to federate)")
+            self.executor.run_fn = self._run_fn
         # process-wide jitted CNN halves (core.split caches them): gateways
         # share one trace cache, so spinning up per-tenant/solo gateways in
         # benchmarks and tests does not recompile per instance
@@ -205,6 +222,18 @@ class ServingGateway:
         z_tilde = plan.restore(decoded.pad_to(batch.padded_size))
         logits = self._cloud_fn(self.params, z_tilde)
         logits = np.asarray(jax.block_until_ready(logits))
+        return logits, time.perf_counter() - t0
+
+    def _run_batch_mesh(self, batch: MicroBatch) -> tuple[np.ndarray, float]:
+        """Batched decode on the host, restore + cloud forward on the mesh.
+
+        Same contract as :meth:`_run_batch` (logits rows align with
+        ``batch.requests``, measured wall time), but the device half runs
+        through the executor's ``run_sharded`` shard_map program."""
+        plan = self.plan_for(batch.key.op)
+        t0 = time.perf_counter()
+        decoded = plan.decode_batch([r.blob for r in batch.requests])
+        logits = self.executor.run_sharded(plan, decoded, batch.padded_size)
         return logits, time.perf_counter() - t0
 
     def _record_ticket(self, ticket: ExecTicket, responses,
@@ -315,7 +344,8 @@ class ServingGateway:
             # results are consumed (and the batch/logits refs released)
             # immediately, so memory tracks one batch, not the workload
             ticket = self.executor.submit(
-                batch, max(r.t_arrive for r in batch.requests))
+                batch, max(r.t_arrive for r in batch.requests),
+                run_fn=self._run_fn)
             self.executor.on_start(ticket)
             self._record_ticket(ticket, responses, telemetry)
             self.executor.complete(ticket)
@@ -408,12 +438,14 @@ class MultiTenantGateway(ServingGateway):
                  adaptive_window: bool = False,
                  min_window_s: float = 0.0, seed: int = 0,
                  executor: CloudExecutor | None = None,
+                 shared_executor: bool = False,
                  admission: AdmissionPolicy | None = None,
                  tracer=None, metrics=None):
         super().__init__(params, baf_bank, channel=None, controller=None,
                          default_op=default_op, backend=backend,
                          max_batch=max_batch, fused=fused,
                          capabilities=capabilities, executor=executor,
+                         shared_executor=shared_executor,
                          tracer=tracer, metrics=metrics)
         self.admission = admission
         specs = list(tenants)
@@ -464,185 +496,298 @@ class MultiTenantGateway(ServingGateway):
         return self._fit_op(rd.op)
 
     # -- orchestration ------------------------------------------------------
-    def serve_tenants(self, workload: "list[TenantRequest]") -> tuple[
-            dict[str, list], Telemetry]:
-        """Run the event loop over the whole workload; returns per-tenant
-        outcomes (in per-tenant submission order — each entry is a
-        :class:`GatewayResponse` or an explicit :class:`RequestShed`) and
-        merged telemetry (served records + the separate ``shed`` series)."""
+    def _begin_run(self, workload: "list[TenantRequest]") -> "_FederatedRun":
+        """Reset this gateway's per-run state (channels, admission, a fresh
+        scheduler/batcher/telemetry) and return it bundled for the event
+        loop. The shared executor is NOT reset here — the federation driver
+        resets it exactly once per run."""
         for w in workload:
             if w.tenant not in self.specs:
                 raise KeyError(f"unknown tenant {w.tenant!r}")
         for ch in self.channels.values():
             ch.reset()
-        self.executor.reset()
         if self.admission is not None:
             self.admission.reset()
         sched = DeficitRoundRobinScheduler(self.specs.values(),
                                            **self._sched_args)
         if self.metrics is not None:
             sched.bind_metrics(self.metrics)
-        tracer = self.tracer
         self.last_scheduler = sched          # post-run introspection (tests,
-        telemetry = Telemetry(               # fairness/budget audits)
-            registry=self.metrics)
-        batcher = MicroBatcher(max_batch=self.max_batch,
-                               window_s=self.batch_window_s,
-                               adaptive=self.adaptive_window,
-                               min_window_s=self.min_window_s)
-        responses: dict[str, dict[int, object]] = {
-            n: {} for n in self.specs}
-        counts = {n: 0 for n in self.specs}
+        return _FederatedRun(                # fairness/budget audits)
+            gateway=self, sched=sched,
+            telemetry=Telemetry(registry=self.metrics),
+            batcher=MicroBatcher(max_batch=self.max_batch,
+                                 window_s=self.batch_window_s,
+                                 adaptive=self.adaptive_window,
+                                 min_window_s=self.min_window_s),
+            responses={n: {} for n in self.specs},
+            counts={n: 0 for n in self.specs},
+            n_requests=len(workload))
 
-        events: list = []
-        seq = itertools.count()
-
-        def push(t: float, kind: str, payload) -> None:
-            heapq.heappush(events, (float(t), next(seq), kind, payload))
-
-        # dedupe only drains that have not run yet: a submit landing at a
-        # timestamp whose drain already executed must get a fresh one, or
-        # its job would strand in the scheduler queue
-        drain_times: set[float] = set()
-
-        def schedule_drain(t: float) -> None:
-            t = float(t)
-            if t not in drain_times:
-                drain_times.add(t)
-                push(t, "drain", None)
-
-        # generation -> earliest flush time scheduled so far. Adaptive
-        # windows can move a group's deadline *earlier* as arrivals sharpen
-        # the rate estimate; re-push then (stale later events no-op via gen)
-        scheduled_flushes: dict[int, float] = {}
-
-        def dispatch(batch: MicroBatch, t_ready: float) -> None:
-            # the executor plans the batch onto a queue of its virtual
-            # clock; the loop replays the planned times as events so depth
-            # introspection (admission's signal) tracks the virtual clock
-            ticket = self.executor.submit(batch, t_ready)
-            push(ticket.t_start, "exec_start", ticket)
-            push(ticket.t_done, "exec_done", ticket)
-
-        for w in workload:
-            push(w.t_submit, "submit", w)
-
-        while events:
-            t, _, kind, payload = heapq.heappop(events)
-
-            if kind == "submit":
-                w = payload
-                spec = self.specs[w.tenant]
-                local_id = counts[w.tenant]
-                counts[w.tenant] += 1
-                if tracer is not None:
-                    tracer.instant("submit", t, track=f"tenant:{w.tenant}",
-                                   tenant=w.tenant, req_id=local_id)
-                if self.admission is not None:
-                    decision = self.admission.admit(
-                        tenant=w.tenant, priority=spec.priority, t=t,
-                        executor=self.executor)
-                    if not decision.admitted:
-                        # shed BEFORE any edge compute or encoding is spent;
-                        # the outcome is explicit: it takes the response slot
-                        # and lands in telemetry's separate shed series
-                        outcome = RequestShed(
-                            req_id=local_id, tenant=w.tenant, t_submit=t,
-                            reason=decision.reason, priority=spec.priority)
-                        responses[w.tenant][local_id] = outcome
-                        telemetry.record_shed(ShedRecord(
-                            req_id=local_id, tenant=w.tenant, t_submit=t,
-                            reason=decision.reason, priority=spec.priority))
-                        if tracer is not None:
-                            tracer.instant(
-                                "admission.shed", t,
-                                track=f"tenant:{w.tenant}", tenant=w.tenant,
-                                req_id=local_id, reason=decision.reason,
-                                priority=spec.priority)
-                        continue
-                img = np.asarray(w.img)
-                if img.ndim == 3:
-                    img = img[None]
-                z = self._edge_fn(self.params, img)
-                op = self._pick_tenant_op(spec, z, sched.budget_remaining(t))
-                blob = self.plan_for(op).encode(z)
-                if tracer is not None:
-                    tracer.instant("edge.encode", t,
-                                   track=f"tenant:{w.tenant}",
-                                   tenant=w.tenant, req_id=local_id,
-                                   op=str(op), wire_bits=8 * blob.nbytes)
-                # the scheduler meters the job at its true container length,
-                # so DRR shares reflect real bits on the wire
-                sched.enqueue(UplinkJob(
-                    tenant=w.tenant, req_id=local_id, bits=8 * blob.nbytes,
-                    t_enqueue=t, payload=(op, blob, blob.stats)))
-                schedule_drain(t)
-
-            elif kind == "drain":
-                drain_times.discard(t)
-                for job in sched.drain(t):
-                    blob = job.payload[1]
-                    tx = self.channels[job.tenant].transmit_bytes(blob.data, t)
-                    push(tx.t_arrive, "arrive", (job, tx))
-                if sched.pending():
-                    schedule_drain(sched.next_tick_time(t))
-
-            elif kind == "arrive":
-                job, tx = payload
-                op, blob, stats = job.payload
-                req = EncodedRequest(
-                    req_id=job.req_id, blob=blob, t_arrive=t,
-                    meta=(op, stats, tx, job), tenant=job.tenant)
-                fulls = batcher.add(req, now=t)
-                for full in fulls:
-                    dispatch(full, t)
-                if not fulls:
-                    deadline = batcher.deadline(req.key)
-                    if deadline is not None:
-                        due, gen = deadline
-                        if due < scheduled_flushes.get(gen, float("inf")):
-                            scheduled_flushes[gen] = due
-                            push(due, "flush", (req.key, gen))
-
-            elif kind == "flush":
-                key, gen = payload
-                current = batcher.deadline(key)
-                if (current is not None and current[1] == gen
-                        and current[0] > t + 1e-12):
-                    # the adaptive estimate drifted *later* (traffic
-                    # decelerated after this event was scheduled): chase the
-                    # new due time instead of flushing undersized. Each
-                    # re-push is strictly later and the deadline is capped
-                    # at t_first + window_s, so the chase terminates.
-                    scheduled_flushes[gen] = current[0]
-                    push(current[0], "flush", (key, gen))
-                else:
-                    batch = batcher.take(key, gen)
-                    if batch is not None:
-                        scheduled_flushes.pop(gen, None)
-                        dispatch(batch, t)
-
-            elif kind == "exec_start":
-                self.executor.on_start(payload)
-
-            elif kind == "exec_done":
-                self._record_ticket(payload, responses, telemetry)
-                self.executor.complete(payload)   # releases batch/logits refs
-
-            # events may drain while buckets still hold requests (no batch
-            # window): sweep the leftovers through the same dispatch path
-            if not events:
-                for rest in batcher.flush():
-                    dispatch(rest, max(r.t_arrive for r in rest.requests))
-
+    def _finish_run(self, st: "_FederatedRun") -> tuple[dict[str, list],
+                                                        Telemetry]:
         # no silent drops: every submission ended as exactly one response
         # or one explicit shed outcome
         out = {}
-        for name, got in responses.items():
-            assert len(got) == counts[name], (
-                f"tenant {name}: {len(got)}/{counts[name]} outcomes")
-            out[name] = [got[i] for i in range(counts[name])]
-        assert len(telemetry) + len(telemetry.shed) == len(workload)
+        for name, got in st.responses.items():
+            assert len(got) == st.counts[name], (
+                f"tenant {name}: {len(got)}/{st.counts[name]} outcomes")
+            out[name] = [got[i] for i in range(st.counts[name])]
+        assert len(st.telemetry) + len(st.telemetry.shed) == st.n_requests
         if self.metrics is not None:
             self.executor.export_metrics(self.metrics)
-        return out, telemetry
+        return out, st.telemetry
+
+    def serve_tenants(self, workload: "list[TenantRequest]") -> tuple[
+            dict[str, list], Telemetry]:
+        """Run the event loop over the whole workload; returns per-tenant
+        outcomes (in per-tenant submission order — each entry is a
+        :class:`GatewayResponse` or an explicit :class:`RequestShed`) and
+        merged telemetry (served records + the separate ``shed`` series).
+
+        A federation of one: the full loop lives in
+        :func:`serve_federated`, which drives M gateways on a single
+        virtual clock against one shared executor."""
+        return serve_federated([(self, workload)])[0]
+
+
+# ---------------------------------------------------------------------------
+# Gateway federation: M gateways, one shared cloud executor
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _FederatedRun:
+    """One gateway's per-run state inside a federated event loop."""
+    gateway: MultiTenantGateway
+    sched: DeficitRoundRobinScheduler
+    telemetry: Telemetry
+    batcher: MicroBatcher
+    responses: dict                   # tenant -> {req_id: outcome}
+    counts: dict                      # tenant -> submissions seen
+    n_requests: int
+    # dedupe only drains that have not run yet: a submit landing at a
+    # timestamp whose drain already executed must get a fresh one, or its
+    # job would strand in the scheduler queue
+    drain_times: "set[float]" = None
+    # generation -> earliest flush time scheduled so far. Adaptive windows
+    # can move a group's deadline *earlier* as arrivals sharpen the rate
+    # estimate; re-push then (stale later events no-op via gen)
+    scheduled_flushes: "dict[int, float]" = None
+
+    def __post_init__(self):
+        self.drain_times = set()
+        self.scheduled_flushes = {}
+
+
+def serve_federated(runs: "list[tuple[MultiTenantGateway, list]]"
+                    ) -> "list[tuple[dict[str, list], Telemetry]]":
+    """Drive M gateways' event loops on ONE virtual clock against ONE shared
+    cloud executor.
+
+    ``runs`` is ``[(gateway, workload), ...]``. Every gateway keeps its own
+    tenants, uplink scheduler, channels, admission policy, batcher, and
+    telemetry; the cloud capacity — the mesh — is common. Events from all
+    gateways interleave in global time order on a single heap, so a bucket
+    flushed by gateway 0 occupies the shared executor exactly when gateway
+    1's admission policy reads ``executor.depth()`` (shared-mesh depth
+    introspection: one gateway's burst sheds another's overflow).
+
+    Each submit passes the owning gateway's ``run_fn``, so one executor
+    serves every gateway's plans without rebinding. Returns one
+    ``(outcomes, telemetry)`` per run, aligned with ``runs``; replay is
+    bit-identical under a deterministic cost model (``LinearCostModel`` or a
+    frozen ``CalibratedCostModel``).
+    """
+    if not runs:
+        raise ValueError("serve_federated needs at least one "
+                         "(gateway, workload) pair")
+    gateways = [gw for gw, _ in runs]
+    if len(set(map(id, gateways))) != len(gateways):
+        raise ValueError("each gateway may appear once per federation")
+    executor = gateways[0].executor
+    for gw in gateways[1:]:
+        if gw.executor is not executor:
+            raise ValueError("federated gateways must share one executor "
+                             "(build them with shared_executor=True around "
+                             "a single instance)")
+    executor.reset()
+    states = [gw._begin_run(workload) for gw, workload in runs]
+
+    events: list = []
+    seq = itertools.count()
+
+    def push(t: float, gi: int, kind: str, payload) -> None:
+        heapq.heappush(events, (float(t), next(seq), gi, kind, payload))
+
+    def schedule_drain(t: float, gi: int) -> None:
+        t = float(t)
+        st = states[gi]
+        if t not in st.drain_times:
+            st.drain_times.add(t)
+            push(t, gi, "drain", None)
+
+    def dispatch(gi: int, batch: MicroBatch, t_ready: float) -> None:
+        # the executor plans the batch onto a queue of its virtual clock;
+        # the loop replays the planned times as events so depth
+        # introspection (admission's signal) tracks the virtual clock
+        ticket = executor.submit(batch, t_ready,
+                                 run_fn=states[gi].gateway._run_fn)
+        push(ticket.t_start, gi, "exec_start", ticket)
+        push(ticket.t_done, gi, "exec_done", ticket)
+
+    for gi, (gw, workload) in enumerate(runs):
+        for w in workload:
+            push(w.t_submit, gi, "submit", w)
+
+    while events:
+        t, _, gi, kind, payload = heapq.heappop(events)
+        gw = gateways[gi]
+        st = states[gi]
+        tracer = gw.tracer
+
+        if kind == "submit":
+            w = payload
+            spec = gw.specs[w.tenant]
+            local_id = st.counts[w.tenant]
+            st.counts[w.tenant] += 1
+            if tracer is not None:
+                tracer.instant("submit", t, track=f"tenant:{w.tenant}",
+                               tenant=w.tenant, req_id=local_id)
+            if gw.admission is not None:
+                decision = gw.admission.admit(
+                    tenant=w.tenant, priority=spec.priority, t=t,
+                    executor=executor)
+                if not decision.admitted:
+                    # shed BEFORE any edge compute or encoding is spent;
+                    # the outcome is explicit: it takes the response slot
+                    # and lands in telemetry's separate shed series
+                    outcome = RequestShed(
+                        req_id=local_id, tenant=w.tenant, t_submit=t,
+                        reason=decision.reason, priority=spec.priority)
+                    st.responses[w.tenant][local_id] = outcome
+                    st.telemetry.record_shed(ShedRecord(
+                        req_id=local_id, tenant=w.tenant, t_submit=t,
+                        reason=decision.reason, priority=spec.priority))
+                    if tracer is not None:
+                        tracer.instant(
+                            "admission.shed", t,
+                            track=f"tenant:{w.tenant}", tenant=w.tenant,
+                            req_id=local_id, reason=decision.reason,
+                            priority=spec.priority)
+                    continue
+            img = np.asarray(w.img)
+            if img.ndim == 3:
+                img = img[None]
+            z = gw._edge_fn(gw.params, img)
+            op = gw._pick_tenant_op(spec, z, st.sched.budget_remaining(t))
+            blob = gw.plan_for(op).encode(z)
+            if tracer is not None:
+                tracer.instant("edge.encode", t,
+                               track=f"tenant:{w.tenant}",
+                               tenant=w.tenant, req_id=local_id,
+                               op=str(op), wire_bits=8 * blob.nbytes)
+            # the scheduler meters the job at its true container length,
+            # so DRR shares reflect real bits on the wire
+            st.sched.enqueue(UplinkJob(
+                tenant=w.tenant, req_id=local_id, bits=8 * blob.nbytes,
+                t_enqueue=t, payload=(op, blob, blob.stats)))
+            schedule_drain(t, gi)
+
+        elif kind == "drain":
+            st.drain_times.discard(t)
+            for job in st.sched.drain(t):
+                blob = job.payload[1]
+                tx = gw.channels[job.tenant].transmit_bytes(blob.data, t)
+                push(tx.t_arrive, gi, "arrive", (job, tx))
+            if st.sched.pending():
+                schedule_drain(st.sched.next_tick_time(t), gi)
+
+        elif kind == "arrive":
+            job, tx = payload
+            op, blob, stats = job.payload
+            req = EncodedRequest(
+                req_id=job.req_id, blob=blob, t_arrive=t,
+                meta=(op, stats, tx, job), tenant=job.tenant)
+            fulls = st.batcher.add(req, now=t)
+            for full in fulls:
+                dispatch(gi, full, t)
+            if not fulls:
+                deadline = st.batcher.deadline(req.key)
+                if deadline is not None:
+                    due, gen = deadline
+                    if due < st.scheduled_flushes.get(gen, float("inf")):
+                        st.scheduled_flushes[gen] = due
+                        push(due, gi, "flush", (req.key, gen))
+
+        elif kind == "flush":
+            key, gen = payload
+            current = st.batcher.deadline(key)
+            if (current is not None and current[1] == gen
+                    and current[0] > t + 1e-12):
+                # the adaptive estimate drifted *later* (traffic
+                # decelerated after this event was scheduled): chase the
+                # new due time instead of flushing undersized. Each
+                # re-push is strictly later and the deadline is capped
+                # at t_first + window_s, so the chase terminates.
+                st.scheduled_flushes[gen] = current[0]
+                push(current[0], gi, "flush", (key, gen))
+            else:
+                batch = st.batcher.take(key, gen)
+                if batch is not None:
+                    st.scheduled_flushes.pop(gen, None)
+                    dispatch(gi, batch, t)
+
+        elif kind == "exec_start":
+            executor.on_start(payload)
+
+        elif kind == "exec_done":
+            gw._record_ticket(payload, st.responses, st.telemetry)
+            executor.complete(payload)   # releases batch/logits refs
+
+        # events may drain while buckets still hold requests (no batch
+        # window): sweep every gateway's leftovers through the same
+        # dispatch path, in federation order (deterministic)
+        if not events:
+            for gj, sj in enumerate(states):
+                for rest in sj.batcher.flush():
+                    dispatch(gj, rest,
+                             max(r.t_arrive for r in rest.requests))
+
+    return [gw._finish_run(st) for gw, st in zip(gateways, states)]
+
+
+class GatewayFederation:
+    """M multi-tenant gateways sharing one cloud executor (the shared mesh).
+
+    Construction validates the sharing contract — every gateway holds the
+    same executor instance and (for M > 1) was built with
+    ``shared_executor=True``. :meth:`serve` zips gateways with their
+    workloads onto one virtual clock via :func:`serve_federated`; admission
+    stays per-gateway while ``depth()`` exposes the shared-mesh backlog all
+    of them key on.
+    """
+
+    def __init__(self, gateways: "list[MultiTenantGateway]"):
+        gateways = list(gateways)
+        if not gateways:
+            raise ValueError("federation needs at least one gateway")
+        executor = gateways[0].executor
+        for gw in gateways:
+            if gw.executor is not executor:
+                raise ValueError("federated gateways must share one executor")
+            if len(gateways) > 1 and not gw.shared_executor:
+                raise ValueError("build federated gateways with "
+                                 "shared_executor=True")
+        self.gateways = gateways
+        self.executor = executor
+
+    def serve(self, workloads: "list[list[TenantRequest]]"
+              ) -> "list[tuple[dict[str, list], Telemetry]]":
+        if len(workloads) != len(self.gateways):
+            raise ValueError(f"{len(workloads)} workloads for "
+                             f"{len(self.gateways)} gateways")
+        return serve_federated(list(zip(self.gateways, workloads)))
+
+    def depth(self) -> int:
+        """Shared-mesh backlog every member's admission policy reads."""
+        return self.executor.depth()

@@ -1,0 +1,250 @@
+"""Regression tests for the two serving-tier poisons fixed in this release:
+
+1. fp16-overflow NaNs: ``nextafter(mx, inf)`` at the finite fp16 extremes
+   (±65504) used to yield ``inf`` side info, which zeroed every code and
+   dequantized to NaN. All three quantize paths (core/quant, the Pallas
+   kernel, the pod-boundary stream path) now saturate the widened bound at
+   ±65504 with bit-identical math.
+
+2. Stale channel-budget accounting: ``SimulatedChannel.transmit`` left
+   ``now`` behind ``t_done`` for packets spanning several budget ticks, so
+   the no-arg ``budget_remaining()`` read a tick the wire had already blown
+   past. The clock now advances through the whole transmission; explicit
+   ``at=`` call sites are unchanged bit for bit.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.quant import compute_quant_params, dequantize, quantize
+from repro.distributed.pipeline import _dequantize_stream, _quantize_stream
+from repro.kernels.quantize import quantize_pallas
+from repro.serve.channel import ChannelConfig, SimulatedChannel
+
+F16_MAX = 65504.0
+F16_SUBNORMAL = 6e-8          # well inside fp16's subnormal range
+
+
+def _roundtrip_tol(qp):
+    """Half a quantizer step plus the fp16 rounding slack on the bounds.
+
+    fp16-rounding the min can land *above* a data point (clip error up to
+    half an ulp of the bound), so the bound is 0.5*step + ulp(side info)."""
+    step = np.asarray(qp.step(), np.float64)
+    ulp = (np.abs(np.asarray(qp.mins, np.float64))
+           + np.abs(np.asarray(qp.maxs, np.float64))) * 2.0 ** -10
+    return 0.5001 * step + ulp
+
+
+# ---------------------------------------------------------------------------
+# fp16 overflow: core/quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_fp16_extremes_round_trip_losslessly_core(bits):
+    """±65504 channels keep finite side info and recover exactly: the
+    endpoints map to codes 0 / 2^n - 1 whose dequantization is the bound."""
+    x = jnp.asarray([[-F16_MAX, 0.0], [F16_MAX, F16_SUBNORMAL]], jnp.float32)
+    qp = compute_quant_params(x, bits)
+    assert bool(jnp.all(jnp.isfinite(qp.mins.astype(jnp.float32))))
+    assert bool(jnp.all(jnp.isfinite(qp.maxs.astype(jnp.float32))))
+    codes = quantize(x, qp)
+    assert int(codes.max()) <= qp.levels
+    deq = np.asarray(dequantize(codes, qp))
+    assert np.all(np.isfinite(deq))
+    # exact at the extremes (range [-65504, 65504] divides evenly)
+    assert deq[0, 0] == -F16_MAX
+    assert deq[1, 0] == F16_MAX
+
+
+def test_issue_repro_no_nan():
+    """The exact tensor from the bug report: a channel whose max is fp16-max
+    used to produce maxs=inf -> codes all 0 -> NaN out of dequantize."""
+    x = jnp.asarray([[0.0, 60000.0], [F16_MAX, -5.0]], jnp.float32)
+    qp = compute_quant_params(x, 8)
+    side = np.stack([np.asarray(qp.mins, np.float32),
+                     np.asarray(qp.maxs, np.float32)])
+    assert np.all(np.isfinite(side)), side
+    deq = np.asarray(dequantize(quantize(x, qp), qp))
+    assert np.all(np.isfinite(deq))
+    assert np.all(np.abs(deq - np.asarray(x)) <= _roundtrip_tol(qp))
+
+
+def test_beyond_fp16_range_saturates_finite():
+    """Values past fp16's range cast to ±inf; the bounds must clamp to
+    ±65504 and the round-trip stays finite (saturating, not exact)."""
+    x = jnp.asarray([[-70000.0, 1.0], [70000.0, -1.0]], jnp.float32)
+    qp = compute_quant_params(x, 8)
+    assert float(qp.maxs.astype(jnp.float32).max()) == F16_MAX
+    assert float(qp.mins.astype(jnp.float32).min()) == -F16_MAX
+    deq = np.asarray(dequantize(quantize(x, qp), qp))
+    assert np.all(np.isfinite(deq))
+    assert deq.max() == F16_MAX and deq.min() == -F16_MAX
+
+
+def test_per_example_extremes_finite():
+    x = jnp.full((2, 3, 3, 4), F16_MAX, jnp.float32)
+    x = x.at[1].multiply(-1.0)
+    qp = compute_quant_params(x, 8, per_example=True)
+    assert bool(jnp.all(jnp.isfinite(qp.maxs.astype(jnp.float32))))
+    deq = np.asarray(dequantize(quantize(x, qp), qp))
+    assert np.all(np.isfinite(deq))
+
+
+# ---------------------------------------------------------------------------
+# fp16 overflow: Pallas kernel vs reference, stream path
+# ---------------------------------------------------------------------------
+
+def _extreme_tensor(b, r, c, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=3.0, size=(b, r, c)).astype(np.float32)
+    specials = np.asarray([F16_MAX, -F16_MAX, 70000.0, -70000.0,
+                           F16_SUBNORMAL, -F16_SUBNORMAL, 0.0, 1.0],
+                          np.float32)
+    flat = x.reshape(-1)
+    idx = rng.permutation(flat.size)[:specials.size * 4]
+    flat[idx] = np.tile(specials, 4)
+    return jnp.asarray(flat.reshape(b, r, c))
+
+
+def test_pallas_kernel_matches_reference_at_extremes():
+    """The Pallas quantizer and the jnp reference stay bit-identical through
+    the saturation fix (codes, mins, and maxs all exact)."""
+    x = _extreme_tensor(2, 64, 8)
+    codes_p, mins_p, maxs_p = quantize_pallas(x, 8, block_c=8)
+    qp = compute_quant_params(x, 8, per_example=True)       # (B, 1, C) side
+    codes_r = quantize(x, qp)
+    assert np.array_equal(np.asarray(codes_p), np.asarray(codes_r))
+    assert np.array_equal(np.asarray(mins_p),
+                          np.asarray(qp.mins).reshape(mins_p.shape))
+    assert np.array_equal(np.asarray(maxs_p),
+                          np.asarray(qp.maxs).reshape(maxs_p.shape))
+    assert np.all(np.isfinite(np.asarray(maxs_p, np.float32)))
+
+
+def test_stream_path_extremes_round_trip():
+    """The pod-boundary stream quantizer carries the same fix: finite side
+    info and lossless recovery of the fp16 extremes."""
+    x = jnp.asarray([[-F16_MAX, 0.0, F16_SUBNORMAL],
+                     [F16_MAX, 1.0, -F16_SUBNORMAL]], jnp.float32)
+    codes, mn, mx = _quantize_stream(x, 8)
+    assert np.all(np.isfinite(np.asarray(mn, np.float32)))
+    assert np.all(np.isfinite(np.asarray(mx, np.float32)))
+    deq = np.asarray(_dequantize_stream(codes, mn, mx, 8, jnp.float32))
+    assert np.all(np.isfinite(deq))
+    assert deq[0, 0] == -F16_MAX and deq[1, 0] == F16_MAX
+
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.sampled_from([F16_MAX, 4096.0, 1.0, 1e-3, F16_SUBNORMAL]),
+       offset=st.sampled_from([0.0, -1.0, 0.5]),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_roundtrip_property_extreme_dynamic_ranges(scale, offset, seed):
+    """Property: over any dynamic range up to full fp16 (including the
+    subnormal regime), every path yields finite side info and a round-trip
+    error within half a quantizer step (+ fp16 bound slack); the core
+    per-channel path and the stream path agree bit for bit."""
+    rng = np.random.default_rng(seed)
+    x_np = (rng.uniform(-1.0, 1.0, size=(3, 5, 4)) + offset) * scale
+    x_np = x_np.astype(np.float32)
+    x_np[0, 0, 0] = scale                 # pin the exact extremes
+    x_np[0, 1, 1] = -scale
+    x = jnp.asarray(x_np)
+
+    qp = compute_quant_params(x.reshape(-1, 4), 8)
+    assert bool(jnp.all(jnp.isfinite(qp.mins.astype(jnp.float32))))
+    assert bool(jnp.all(jnp.isfinite(qp.maxs.astype(jnp.float32))))
+    codes = quantize(x.reshape(-1, 4), qp)
+    deq = np.asarray(dequantize(codes, qp))
+    assert np.all(np.isfinite(deq))
+    assert np.all(np.abs(deq - x_np.reshape(-1, 4)) <= _roundtrip_tol(qp))
+
+    s_codes, s_mn, s_mx = _quantize_stream(x.reshape(-1, 4), 8)
+    assert np.array_equal(np.asarray(s_codes), np.asarray(codes))
+    assert np.array_equal(np.asarray(s_mn), np.asarray(qp.mins))
+    assert np.array_equal(np.asarray(s_mx), np.asarray(qp.maxs))
+
+    p_codes, p_mn, p_mx = quantize_pallas(x, 8, block_c=4)
+    qpe = compute_quant_params(x, 8, per_example=True)
+    assert np.array_equal(np.asarray(p_codes), np.asarray(quantize(x, qpe)))
+    assert np.all(np.isfinite(np.asarray(p_mx, np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# channel budget: the clock commits to the transmission it planned
+# ---------------------------------------------------------------------------
+
+def _metered(per_tick=1000, bw=1000.0, latency=0.0):
+    cfg = ChannelConfig(bandwidth_bps=bw, base_latency_s=latency,
+                        tick_s=1.0, budget_bits_per_tick=per_tick)
+    return SimulatedChannel(cfg)
+
+
+def test_spanning_packet_commits_clock_and_budget():
+    """A 2500-bit packet over a 1000-bit/tick link spends ticks 0..2 and
+    finishes at t=2.5; the no-arg budget must read tick 2's remaining 500
+    bits, not tick 0 (which the wire already blew past)."""
+    ch = _metered()
+    tx = ch.transmit(2500)
+    assert tx.t_start == 0.0
+    assert tx.t_arrive == 2.5
+    assert ch.now == 2.5
+    assert ch.budget_remaining() == 500
+    assert ch.budget_remaining() == ch.budget_remaining(at=ch.now)
+    # explicit at= reads are unchanged: tick 0 is fully spent, tick 3 fresh
+    assert ch.budget_remaining(at=0.0) == 0
+    assert ch.budget_remaining(at=3.2) == 1000
+
+
+def test_budget_monotonic_under_multi_tick_packets():
+    """The clock never runs behind the wire, and the no-arg budget always
+    describes the tick containing ``now`` — across a mix of sub-tick and
+    multi-tick packets."""
+    ch = _metered()
+    prev_now = 0.0
+    for bits in (300, 2500, 100, 4000, 999):
+        tx = ch.transmit(bits)
+        assert ch.now >= prev_now
+        assert ch.now >= tx.t_start
+        prev_now = ch.now
+        rem = ch.budget_remaining()
+        assert 0 <= rem <= ch.cfg.budget_bits_per_tick
+        tick = int(math.floor(ch.now / ch.cfg.tick_s))
+        assert rem == (ch.cfg.budget_bits_per_tick
+                       - ch._tick_used.get(tick, 0))
+
+
+def test_explicit_at_call_sites_bit_identical():
+    """Transmission timestamps and ``at=`` budget reads never depended on
+    ``now``; pin the exact pre-fix values so the fix cannot drift them."""
+    cfg = ChannelConfig(bandwidth_bps=1000.0, base_latency_s=0.01,
+                        tick_s=1.0, budget_bits_per_tick=1000)
+    ch = SimulatedChannel(cfg)
+    tx1 = ch.transmit(600, 0.0)
+    assert (tx1.t_submit, tx1.t_start, tx1.t_arrive) == (0.0, 0.0, 0.61)
+    # 400 bits left in tick 0 < 600: defer to tick 1, wire free at 0.6
+    tx2 = ch.transmit(600, 0.1)
+    assert (tx2.t_submit, tx2.t_start, tx2.t_arrive) == (0.1, 1.0, 1.61)
+    assert ch.budget_remaining(at=0.5) == 400
+    assert ch.budget_remaining(at=1.5) == 400
+    assert ch.now == 1.6
+
+
+def test_advance_still_moves_past_committed_clock():
+    ch = _metered()
+    ch.transmit(2500)
+    ch.advance(0.5)
+    assert ch.now == 3.0
+    assert ch.budget_remaining() == 1000
+
+
+def test_reset_clears_committed_clock():
+    ch = _metered()
+    ch.transmit(2500)
+    ch.reset()
+    assert ch.now == 0.0
+    assert ch.budget_remaining() == 1000
