@@ -110,6 +110,42 @@ def token_batch_iterator(cfg: TokenDatasetConfig, seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# Video — temporally correlated camera frames
+# ---------------------------------------------------------------------------
+
+def correlated_frames(n_frames: int, *, image_size: int = 32,
+                      num_classes: int = 8, drift: float = 0.03,
+                      noise: float = 0.02, seed: int = 0) -> np.ndarray:
+    """A synthetic camera clip: one scene slowly drifting, (N, S, S, 3).
+
+    Consecutive frames share almost all content — the scene (a rendered
+    shapes image) translates by a random sub-pixel-ish walk of scale
+    ``drift * image_size`` per frame and picks up a little fresh sensor
+    noise. This is the temporal redundancy the session codec's P-frames
+    exploit: quantized split activations of adjacent frames differ in few,
+    small code steps, so their delta entropy-codes far below an I-frame.
+
+    Pure function of the seed (host-side numpy), deterministic across runs.
+    """
+    if n_frames < 1:
+        raise ValueError("need at least one frame")
+    rng = np.random.default_rng(seed)
+    cfg = ShapesDatasetConfig(image_size=image_size, num_classes=num_classes,
+                              batch_size=1, noise=0.0)
+    base, _ = _render_shapes(jax.random.PRNGKey(seed), cfg)
+    base = np.asarray(base[0])                       # (S, S, 3)
+    frames = np.empty((n_frames, image_size, image_size, 3), np.float32)
+    off = np.zeros(2)
+    for i in range(n_frames):
+        off += rng.normal(scale=drift * image_size, size=2)
+        shift = np.round(off).astype(int)
+        img = np.roll(base, shift, axis=(0, 1))
+        img = img + rng.normal(scale=noise, size=img.shape)
+        frames[i] = img.astype(np.float32)
+    return frames
+
+
+# ---------------------------------------------------------------------------
 # Multi-host sharding
 # ---------------------------------------------------------------------------
 

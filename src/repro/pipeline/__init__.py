@@ -15,14 +15,15 @@ One plan owns a request's coding configuration end to end; serve/ and the
 benchmarks construct all coding state through this package (the old loose
 ``(C, bits, backend)`` entry points in core/split.py are deprecated shims).
 """
-from repro.pipeline.op import (WIRE_PROFILE_VERSION, Capabilities,
-                               NegotiationError, OperatingPoint, negotiate)
+from repro.pipeline.op import (SESSION_WIRE_VERSION, WIRE_PROFILE_VERSION,
+                               Capabilities, NegotiationError, OperatingPoint,
+                               negotiate, negotiate_session)
 from repro.pipeline.plan import (CompressionPlan, DecodedBatch, ModelSpec,
                                  WireBlob, blob_from_tensor, compile)
 
 __all__ = [
-    "WIRE_PROFILE_VERSION", "Capabilities", "NegotiationError",
-    "OperatingPoint", "negotiate",
+    "SESSION_WIRE_VERSION", "WIRE_PROFILE_VERSION", "Capabilities",
+    "NegotiationError", "OperatingPoint", "negotiate", "negotiate_session",
     "CompressionPlan", "DecodedBatch", "ModelSpec", "WireBlob",
     "blob_from_tensor", "compile",
 ]

@@ -26,6 +26,12 @@ from dataclasses import dataclass
 # decode sides must agree before any bytes move.
 WIRE_PROFILE_VERSION = 2
 
+# Streaming-session wire profile: the SessionFrame framing that wraps I/P
+# frames (repro.session.codec writes SSF1). Negotiated separately from the
+# container profile — an endpoint may decode plain containers but not speak
+# the temporal-delta framing, in which case sessions fall back to I-only.
+SESSION_WIRE_VERSION = 1
+
 _TILING_MODES = ("auto", "tiled", "direct")
 _CONTEXT_MODES = ("auto", "none", "static", "adaptive")
 
@@ -116,11 +122,15 @@ class Capabilities:
     max_bits  : deepest quantizer it will decode
     downgrade : whether :func:`negotiate` may substitute a supported backend
                 / shallower bit depth instead of refusing
+    session_profiles : SessionFrame framing generations the decode side
+                speaks (empty tuple = no temporal P-frames; sessions run
+                I-only when downgrade is allowed)
     """
     profiles: tuple = (WIRE_PROFILE_VERSION,)
     backends: tuple | None = None
     max_bits: int = 16
     downgrade: bool = True
+    session_profiles: tuple = (SESSION_WIRE_VERSION,)
 
     def speaks_backend(self, name: str) -> bool:
         return self.backends is None or name in self.backends
@@ -168,3 +178,22 @@ def negotiate(op: OperatingPoint, caps: Capabilities | None) -> OperatingPoint:
             f"no supported backend can serve this operating point: {e}"
         ) from None
     return out
+
+
+def negotiate_session(caps: Capabilities | None, *,
+                      profile: int = SESSION_WIRE_VERSION) -> bool:
+    """Can a session stream temporal P-frames at this endpoint?
+
+    True = the decode side speaks the SessionFrame profile, P-frames may
+    flow. False = it does not, but downgrade is allowed, so the session runs
+    I-frame-only (every frame a standalone container — correct, just more
+    bits). Refusal (profile unknown AND downgrade disabled) raises
+    :class:`NegotiationError` before any frame is encoded.
+    """
+    if caps is None or profile in caps.session_profiles:
+        return True
+    if caps.downgrade:
+        return False
+    raise NegotiationError(
+        f"endpoint speaks session profiles {caps.session_profiles}, stream "
+        f"requires profile {profile} and downgrade is disabled")

@@ -166,11 +166,18 @@ class CompressionPlan:
         maxs = np.asarray(qp.maxs, np.float16).reshape(b, 1, 1, c)
         return codes, mins, maxs
 
-    def encode(self, z) -> WireBlob:
-        """Quantize/tile/entropy-code the split activation ``z`` (B, H, W, P)
-        and serialize the container; returns the blob with wire accounting."""
+    def encode_codes(self, codes: np.ndarray, qp,
+                     raw_bits: int | None = None) -> WireBlob:
+        """Tile + entropy-code an already-quantized code tensor (B, H, W, C).
+
+        The coding half of :meth:`encode`, exposed so stateful callers can
+        feed *derived* code tensors — the streaming session codec codes the
+        temporal delta of two frames' codes through exactly this path, so
+        P-frames ride the same backends, container format, and wire
+        accounting as I-frames. ``qp`` carries the side info serialized with
+        the stream (the current frame's quant params, not the reference's).
+        """
         with hooks.timed("pipeline.encode", backend=self.op.wire_backend):
-            codes, qp = self._quantize(z)
             if self.op.tiling == "tiled":
                 # image-style codecs get the paper's tiled 2D image, one per
                 # batch element, stacked vertically
@@ -180,16 +187,25 @@ class CompressionPlan:
                 # direct backends (rANS) code the channel-last tensor as-is
                 stream = codes
             enc = wire.encode(stream, qp, backend=self.op.wire_backend)
+            if raw_bits is None:
+                raw_bits = int(np.prod(codes.shape)) * 32
             stats = SplitStats(
                 total_bits=enc.total_bits(),
                 payload_bits=8 * len(enc.payload),
                 side_info_bits=8 * len(enc.side_info),
-                raw_bits=int(np.prod(z.shape)) * 32,
+                raw_bits=raw_bits,
                 entropy_bits=wire.empirical_entropy_bits(codes, self.op.bits),
                 wire_bits=enc.wire_bits(),
             )
             return WireBlob(data=enc.to_bytes(), op=self.op,
                             shape=tuple(codes.shape), stats=stats)
+
+    def encode(self, z) -> WireBlob:
+        """Quantize/tile/entropy-code the split activation ``z`` (B, H, W, P)
+        and serialize the container; returns the blob with wire accounting."""
+        codes, qp = self._quantize(z)
+        return self.encode_codes(codes, qp,
+                                 raw_bits=int(np.prod(z.shape)) * 32)
 
     # -- decode (cloud side, host) ------------------------------------------
     def _check_blob(self, blob: WireBlob, shape: tuple) -> None:

@@ -15,7 +15,8 @@ from repro.pipeline import Capabilities, NegotiationError
 from repro.serve.batcher import (BucketKey, DecodedRequest, EncodedRequest,
                                  MicroBatch, MicroBatcher, PlanBucketKey,
                                  bucket_sizes)
-from repro.serve.channel import ChannelConfig, SimulatedChannel, Transmission
+from repro.serve.channel import (ChannelConfig, FrameDelivery,
+                                 SimulatedChannel, Transmission)
 from repro.serve.executor import (AdmissionDecision, AdmissionPolicy,
                                   AlwaysAdmit, CalibratedCostModel,
                                   CloudExecutor, CompositeAdmission,
@@ -36,14 +37,14 @@ from repro.serve.rate_control import (ContentKeyedController,
                                       rd_table_to_json)
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
-from repro.serve.telemetry import (RequestRecord, ShedRecord, Telemetry,
-                                   jain_fairness)
+from repro.serve.telemetry import (DegradeRecord, RequestRecord, ShedRecord,
+                                   Telemetry, jain_fairness)
 
 __all__ = [
     "BucketKey", "DecodedRequest", "EncodedRequest", "MicroBatch",
     "MicroBatcher", "PlanBucketKey", "bucket_sizes",
     "Capabilities", "NegotiationError",
-    "ChannelConfig", "SimulatedChannel", "Transmission",
+    "ChannelConfig", "FrameDelivery", "SimulatedChannel", "Transmission",
     "AdmissionDecision", "AdmissionPolicy", "AlwaysAdmit",
     "CalibratedCostModel", "CloudExecutor", "CompositeAdmission",
     "CostModel", "ExecTicket", "LinearCostModel", "MeasuredCost",
@@ -57,6 +58,7 @@ __all__ = [
     "load_or_build_rd_table", "rd_grid", "rd_table_from_json",
     "rd_table_to_json",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
-    "RequestRecord", "ShedRecord", "Telemetry", "jain_fairness",
+    "DegradeRecord", "RequestRecord", "ShedRecord", "Telemetry",
+    "jain_fairness",
     "MetricsRegistry", "Tracer",
 ]

@@ -78,6 +78,7 @@ class EncodedRequest:
     t_arrive: float = 0.0      # channel arrival (virtual clock)
     meta: Any = None           # opaque caller payload (stats, op point, ...)
     tenant: str = ""           # owning tenant ("" = single-tenant serving)
+    priority: int = 0          # TenantSpec.priority (executor scheduling)
 
     @property
     def key(self) -> PlanBucketKey:
@@ -97,6 +98,7 @@ class DecodedRequest:
     t_arrive: float = 0.0      # channel arrival (virtual clock)
     meta: Any = None           # opaque caller payload (stats, op point, ...)
     tenant: str = ""           # owning tenant ("" = single-tenant serving)
+    priority: int = 0          # TenantSpec.priority (executor scheduling)
 
     @property
     def key(self) -> BucketKey:
@@ -124,6 +126,14 @@ class MicroBatch:
     def encoded(self) -> bool:
         """True when the batch still holds wire blobs (decode at dispatch)."""
         return self.codes is None
+
+    @property
+    def priority(self) -> int:
+        """Batch priority class the executor schedules on: the max over its
+        requests' priorities (buckets mix tenants; the batch rides at the
+        highest class aboard)."""
+        return max((getattr(r, "priority", 0) for r in self.requests),
+                   default=0)
 
 
 def bucket_sizes(max_batch: int) -> tuple[int, ...]:

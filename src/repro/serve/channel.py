@@ -34,6 +34,24 @@ class ChannelConfig:
     jitter_s: float = 0.0            # uniform [0, jitter_s) added per packet
     tick_s: float = 1.0              # budget accounting window
     budget_bits_per_tick: int | None = None   # None = unmetered
+    # per-packet impairments (transmit_frame only; the metering paths
+    # transmit/transmit_bytes stay lossless). Draws come from the channel's
+    # seeded generator, so impaired runs replay bit-identically.
+    loss_p: float = 0.0              # P(packet dropped in flight)
+    corrupt_p: float = 0.0           # P(one bit flipped in a surviving packet)
+    reorder_p: float = 0.0           # P(packet delayed by reorder_delay_s)
+    reorder_delay_s: float = 0.0     # extra delay a reordered packet suffers
+    mtu_bytes: int | None = None     # packetization unit (None = one packet)
+
+    def __post_init__(self):
+        for f in ("loss_p", "corrupt_p", "reorder_p"):
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{f} must be a probability, got {v}")
+        if self.reorder_delay_s < 0:
+            raise ValueError("reorder_delay_s must be >= 0")
+        if self.mtu_bytes is not None and self.mtu_bytes < 1:
+            raise ValueError("mtu_bytes must be >= 1")
 
 
 @dataclass(frozen=True)
@@ -51,6 +69,28 @@ class Transmission:
     @property
     def queue_wait_s(self) -> float:
         return self.t_start - self.t_submit
+
+
+@dataclass(frozen=True)
+class FrameDelivery:
+    """One frame's packetized journey through a (possibly lossy) link.
+
+    ``data`` is what the receiver can reassemble: None when any packet was
+    lost (the frame cannot be reconstructed), otherwise the concatenated
+    packet bytes — possibly bit-flipped when ``corrupted``. The bits of lost
+    packets still occupied the wire (``tx.bits`` counts every packet sent);
+    ``tx.t_arrive`` is when reassembly completes, i.e. the *last* packet's
+    arrival — a reordered packet delays its whole frame.
+    """
+    tx: Transmission
+    data: bytes | None
+    n_packets: int
+    lost_packets: int
+    corrupted: bool
+
+    @property
+    def lost(self) -> bool:
+        return self.data is None
 
 
 class SimulatedChannel:
@@ -162,6 +202,55 @@ class SimulatedChannel:
         if len(data) == 0:
             raise ValueError("cannot transmit an empty packet")
         return self.transmit(8 * len(data), t_submit)
+
+    def transmit_frame(self, data: bytes,
+                       t_submit: float | None = None) -> FrameDelivery:
+        """Packetize one frame at ``cfg.mtu_bytes`` and send each packet
+        through the impaired link (loss / single-bit corruption / reorder
+        delay, each an independent seeded draw per packet).
+
+        Serialization and budget accounting go through :meth:`transmit`, so
+        frames and plain blobs share one wire model; the frame arrives when
+        its last packet does. Impairment-free configs make this exactly
+        ``transmit_bytes`` plus packetization.
+        """
+        if len(data) == 0:
+            raise ValueError("cannot transmit an empty frame")
+        cfg = self.cfg
+        mtu = cfg.mtu_bytes if cfg.mtu_bytes is not None else len(data)
+        t_submit = self.now if t_submit is None else max(t_submit, 0.0)
+        parts: list[bytes | None] = []
+        first_start = None
+        last_arrive = 0.0
+        lost = 0
+        corrupted = False
+        for off in range(0, len(data), mtu):
+            pkt = data[off:off + mtu]
+            ptx = self.transmit(8 * len(pkt), t_submit)
+            if first_start is None:
+                first_start = ptx.t_start
+            arrive = ptx.t_arrive
+            # draws are gated on the probabilities so impairment-free frames
+            # consume exactly the same RNG stream as transmit_bytes
+            if cfg.loss_p > 0 and self._rng.random() < cfg.loss_p:
+                lost += 1
+                parts.append(None)
+            else:
+                if cfg.corrupt_p > 0 and self._rng.random() < cfg.corrupt_p:
+                    flipped = bytearray(pkt)
+                    pos = int(self._rng.integers(0, 8 * len(pkt)))
+                    flipped[pos >> 3] ^= 1 << (pos & 7)
+                    pkt = bytes(flipped)
+                    corrupted = True
+                if cfg.reorder_p > 0 and self._rng.random() < cfg.reorder_p:
+                    arrive += cfg.reorder_delay_s
+                parts.append(pkt)
+            last_arrive = max(last_arrive, arrive)
+        tx = Transmission(bits=8 * len(data), t_submit=t_submit,
+                          t_start=first_start, t_arrive=last_arrive)
+        payload = None if lost else b"".join(parts)
+        return FrameDelivery(tx=tx, data=payload, n_packets=len(parts),
+                             lost_packets=lost, corrupted=corrupted)
 
     def advance(self, dt: float) -> None:
         """Move the virtual clock forward (new tick budgets become current)."""

@@ -175,6 +175,7 @@ class ExecTicket:
     queue: int                   # queue index that served it
     logits: Any = None           # real compute output (set at submit)
     state: str = "queued"        # queued -> running -> done
+    priority: int = 0            # batch priority class (max over requests)
 
     @property
     def queue_wait_s(self) -> float:
@@ -212,6 +213,7 @@ class _Queue:
     served: int = 0
     busy_s: float = 0.0          # integrated virtual service time
     last_key: Any = None         # plan bucket last served (affinity)
+    last_priority: int | None = None   # priority class last served
 
 
 class CloudExecutor:
@@ -310,15 +312,29 @@ class CloudExecutor:
     # -- queue selection -----------------------------------------------------
     def _select_queue(self, batch, t_ready: float,
                       duration: float) -> tuple[int, float, float]:
-        """Work-conserving pick: earliest finish; affinity then index ties."""
+        """Work-conserving pick: earliest finish; ties broken by plan-bucket
+        affinity, then priority affinity, then index.
+
+        The priority tie-break (TenantSpec.priority, carried on the batch)
+        prefers a queue that last served this batch's priority class — under
+        contention, priority classes settle onto disjoint queues, so
+        best-effort churn stops evicting the premium class's bucket
+        affinity. A fresh queue (``last_priority`` None) matches every
+        class, and when all traffic shares one priority every queue matches
+        always, so the rank ordering reduces exactly to the pre-priority
+        ``(done, affinity, index)`` — equal-priority workloads replay
+        bit-identically.
+        """
         key = getattr(batch, "key", None)
+        priority = int(getattr(batch, "priority", 0))
         best = None
         for i, q in enumerate(self._queues):
             start = max(t_ready, q.busy_until)
             dur = duration / q.rate
             done = start + dur
             affinity = 0 if (key is not None and q.last_key == key) else 1
-            rank = (done, affinity, i)
+            prio_tie = 0 if q.last_priority in (None, priority) else 1
+            rank = (done, affinity, prio_tie, i)
             if best is None or rank < best[0]:
                 best = (rank, i, start, dur)
         _, i, start, dur = best
@@ -350,10 +366,11 @@ class CloudExecutor:
         q.busy_s += dur
         q.depth += 1
         q.last_key = getattr(batch, "key", None)
+        q.last_priority = int(getattr(batch, "priority", 0))
         ticket = ExecTicket(seq=self._seq, batch=batch, t_submit=t_ready,
                             t_start=start, t_done=start + dur,
                             service_s=dur, wall_s=wall_s, queue=i,
-                            logits=logits)
+                            logits=logits, priority=q.last_priority)
         self._seq += 1
         self.history.append(ticket)
         self._outstanding[ticket.seq] = ticket

@@ -707,7 +707,8 @@ def serve_federated(runs: "list[tuple[MultiTenantGateway, list]]"
             op, blob, stats = job.payload
             req = EncodedRequest(
                 req_id=job.req_id, blob=blob, t_arrive=t,
-                meta=(op, stats, tx, job), tenant=job.tenant)
+                meta=(op, stats, tx, job), tenant=job.tenant,
+                priority=gw.specs[job.tenant].priority)
             fulls = st.batcher.add(req, now=t)
             for full in fulls:
                 dispatch(gi, full, t)

@@ -63,6 +63,24 @@ class ShedRecord:
     priority: int = 0
 
 
+@dataclass(frozen=True)
+class DegradeRecord:
+    """One QoS ladder step-down — degrade-before-shed's distinct outcome.
+
+    A streaming session under pressure steps to a coarser operating point
+    (or sparser cadence) *instead of* being shed; the request is still
+    served, so it also appears among the latency records. This series
+    meters how often and why quality was traded for admission, separate
+    from both the served and the shed series.
+    """
+    tenant: str
+    t: float
+    frame_seq: int
+    from_level: int             # QoS ladder index before the step (0 = best)
+    to_level: int               # ladder index after
+    reason: str                 # the admission rejection that triggered it
+
+
 def jain_fairness(values) -> float:
     """Jain's fairness index over per-tenant allocations: 1 = perfectly
     fair, 1/n = one tenant holds everything."""
@@ -122,6 +140,7 @@ class Telemetry:
         self.max_records = max_records
         self.records: list[RequestRecord] = []
         self.shed: list[ShedRecord] = []
+        self.degraded: list[DegradeRecord] = []
         self._n = 0
         self._tenant: dict[str, _TenantAgg] = {}
 
@@ -159,6 +178,16 @@ class Telemetry:
     def record_shed(self, rec: ShedRecord) -> None:
         self.shed.append(rec)
         self.metrics.counter("gateway_shed_total", tenant=rec.tenant).inc()
+
+    def record_degrade(self, rec: DegradeRecord) -> None:
+        self.degraded.append(rec)
+        self.metrics.counter("gateway_degrade_total", tenant=rec.tenant).inc()
+
+    def degrade_by_tenant(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for d in self.degraded:
+            out[d.tenant] = out.get(d.tenant, 0) + 1
+        return out
 
     def __len__(self) -> int:
         return self._n            # true served count, even when truncated
@@ -283,6 +312,9 @@ class Telemetry:
             if self.shed:
                 out.update({"shed": len(self.shed), "shed_rate": 1.0,
                             "shed_by_tenant": self.shed_by_tenant()})
+            if self.degraded:
+                out.update({"degraded": len(self.degraded),
+                            "degrade_by_tenant": self.degrade_by_tenant()})
             return out
         total_bits = sum(a.bits for a in self._tenant.values())
         total_batch = sum(a.batch_sum for a in self._tenant.values())
@@ -303,6 +335,9 @@ class Telemetry:
             out["shed"] = len(self.shed)
             out["shed_rate"] = self.shed_rate()
             out["shed_by_tenant"] = self.shed_by_tenant()
+        if self.degraded:
+            out["degraded"] = len(self.degraded)
+            out["degrade_by_tenant"] = self.degrade_by_tenant()
         if wall_s is not None and wall_s > 0:
             out["requests_per_s"] = self._n / wall_s
         tenants = self.tenants()
