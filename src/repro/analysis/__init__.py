@@ -1,0 +1,53 @@
+"""`repro.analysis`: the invariant linter + replay sanitizer.
+
+Every CI gate this repo ships — bit-identical replay under
+``LinearCostModel``/``CalibratedCostModel``, byte-identical traces,
+SSF1/RTC1/BaF2 wire stability, session replay signatures — rests on
+invariants that used to live only in reviewers' heads:
+
+  * no wall clock on virtual-clock paths (one silent ``time.time()`` in the
+    gateway event loop breaks every replay gate at once),
+  * no unseeded legacy RNG or set-iteration order feeding wire bytes or
+    schedules,
+  * no raw ``jax.experimental`` use outside the compat shims (the exact
+    API-skew class behind the 40 seed failures PR 2 burned down),
+  * no wire-layout change without a :func:`repro.serve.codec_revision` bump.
+
+This package makes them machine-checked. ``python -m repro.analysis --check``
+runs an AST-based pass (stdlib only, no third-party deps) over ``src/``,
+``benchmarks/``, ``examples/`` and ``tests/``, compares unsuppressed
+violations against the committed ratchet baseline
+(``src/repro/analysis/baseline.json`` — counts may only go down, mirroring
+the tier-1 failure ratchet), verifies the committed wire-schema fingerprints
+(``wire_schema.json``) for the BaF2/RTC1/SSF1 formats, and emits a
+machine-readable JSON report for CI.
+
+Layout:
+
+  * :mod:`repro.analysis.rules`     — the rule registry (RA01..RA06) + config
+  * :mod:`repro.analysis.engine`    — file discovery, pragmas, ratchet, report
+  * :mod:`repro.analysis.wire`      — RA04 wire-schema fingerprints
+  * :mod:`repro.analysis.fixes`     — the ``--fix`` autofixer (mechanical rules)
+  * :mod:`repro.analysis.sanitizer` — the opt-in runtime replay sanitizer
+
+Suppressions are inline pragmas with a mandatory reason::
+
+    t0 = time.perf_counter()  # repro: allow[RA01] -- measures real compute wall time
+
+A pragma without a reason, or one that suppresses nothing, is itself a
+violation (rule RA00) and can never be baselined away. See docs/ANALYSIS.md
+for the full catalog and workflow.
+"""
+from __future__ import annotations
+
+from repro.analysis.engine import (AnalysisResult, Violation, load_baseline,
+                                   run_analysis, write_baseline)
+from repro.analysis.rules import CONFIG, RULES, config_fingerprint
+from repro.analysis.sanitizer import ReplaySanitizerError, replay_sanitizer
+
+__all__ = [
+    "AnalysisResult", "Violation", "run_analysis",
+    "load_baseline", "write_baseline",
+    "CONFIG", "RULES", "config_fingerprint",
+    "ReplaySanitizerError", "replay_sanitizer",
+]

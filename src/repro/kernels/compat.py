@@ -12,13 +12,28 @@ kernel source runs on whatever jax the container bakes in.
 installed class does not accept (e.g. very old jax without
 ``dimension_semantics``), degrading to "no hint" rather than crashing —
 the hints are performance metadata, never correctness.
+
+This module is also the one sanctioned import site for the pallas modules
+themselves (lint rule RA03): ``jax.experimental`` is an unstable namespace
+— pallas has already moved once and is slated to graduate out of
+experimental — so kernels spell
+
+    from repro.kernels.compat import pl, pltpu
+
+and a future module move is absorbed here, in one place, instead of in
+every kernel.
 """
 from __future__ import annotations
 
 import inspect
 from typing import Any
 
+# the import shim boundary: raw jax.experimental is allowed here and in
+# repro/compat.py only (both files are RA03-exempt by config)
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams", "pl", "pltpu", "tpu_compiler_params"]
 
 # Resolve the compiler-params class across the rename. Newest first.
 if hasattr(pltpu, "CompilerParams"):

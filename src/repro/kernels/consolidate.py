@@ -19,7 +19,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.kernels.compat import pl
 
 
 def _consolidate_kernel(z_ref, codes_ref, mins_ref, maxs_ref, out_ref,

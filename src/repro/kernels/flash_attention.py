@@ -21,10 +21,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import pl, pltpu, tpu_compiler_params
 
 NEG_INF = -1e30
 

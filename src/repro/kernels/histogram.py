@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
+from repro.kernels.compat import pl
 
 
 def _hist_kernel(x_ref, counts_ref, *, nsym: int):

@@ -25,10 +25,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.compat import pl, pltpu, tpu_compiler_params
 
 
 def _scan_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, s0_ref,

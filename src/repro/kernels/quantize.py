@@ -21,7 +21,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.kernels.compat import pl
 
 
 def _quantize_kernel(x_ref, codes_ref, mins_ref, maxs_ref, *, levels: int):

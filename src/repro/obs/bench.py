@@ -43,13 +43,23 @@ _BETTER = ("lower", "higher")
 
 
 def git_sha(cwd: str | None = None) -> str:
+    """Best-effort HEAD sha for the bench record's provenance field.
+
+    The canonical allowlisted best-effort site (lint rule RA06, see
+    docs/ANALYSIS.md): every failure mode has the same meaning — "no git
+    identity available here" — and a committed fallback. Even so, the
+    handler names the concrete types it expects (git missing/unrunnable ->
+    OSError, nonzero exit/timeout -> SubprocessError) rather than a
+    blanket ``except Exception``, so a genuine bug (say, a TypeError from
+    a bad ``cwd``) still surfaces loudly.
+    """
     try:
         return subprocess.run(
             ["git", "rev-parse", "HEAD"],
             cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
             capture_output=True, text=True, check=True,
         ).stdout.strip()
-    except Exception:
+    except (subprocess.SubprocessError, OSError):
         return os.environ.get("GITHUB_SHA", "unknown")
 
 

@@ -217,11 +217,15 @@ class ServingGateway:
         request on arrival.
         """
         plan = self.plan_for(batch.key.op)
+        # repro: allow[RA01] -- warm-timing helper: measures real compute
+        # wall for MeasuredCost/CalibratedCostModel; feeds telemetry, never
+        # the virtual clock
         t0 = time.perf_counter()
         decoded = plan.decode_batch([r.blob for r in batch.requests])
         z_tilde = plan.restore(decoded.pad_to(batch.padded_size))
         logits = self._cloud_fn(self.params, z_tilde)
         logits = np.asarray(jax.block_until_ready(logits))
+        # repro: allow[RA01] -- warm-timing helper (see t0 above)
         return logits, time.perf_counter() - t0
 
     def _run_batch_mesh(self, batch: MicroBatch) -> tuple[np.ndarray, float]:
@@ -231,9 +235,12 @@ class ServingGateway:
         ``batch.requests``, measured wall time), but the device half runs
         through the executor's ``run_sharded`` shard_map program."""
         plan = self.plan_for(batch.key.op)
+        # repro: allow[RA01] -- warm-timing helper: measured wall seeds the
+        # mesh executor's calibrated cost fit; never enters the virtual clock
         t0 = time.perf_counter()
         decoded = plan.decode_batch([r.blob for r in batch.requests])
         logits = self.executor.run_sharded(plan, decoded, batch.padded_size)
+        # repro: allow[RA01] -- warm-timing helper (see t0 above)
         return logits, time.perf_counter() - t0
 
     def _record_ticket(self, ticket: ExecTicket, responses,

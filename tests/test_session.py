@@ -1,9 +1,13 @@
 """Streaming session subsystem: temporal delta codec, wire-format hardening,
 desync/NACK recovery, and the QoS'd session manager on the virtual clock.
 """
+import time
+
 import jax
 import numpy as np
 import pytest
+
+from repro.analysis import ReplaySanitizerError, replay_sanitizer
 
 from repro.codec.rans import CorruptStream
 from repro.configs.yolo_baf import smoke_config
@@ -345,8 +349,38 @@ def test_lossy_run_recovers_bounded_ends_in_sync_and_replays(
         assert not tr.in_desync
         # repeated loss can chain cycles; 2x single-cycle bound holds at 5%
         assert tr.max_recovery_s <= 2 * bound
-    _, report2 = mgr.run(frames)
+    # the replay runs under the sanitizer: any wall-clock / global-RNG read
+    # on the replay path would raise instead of silently skewing state
+    with replay_sanitizer():
+        _, report2 = mgr.run(frames)
     assert report.signature() == report2.signature()
+
+
+def test_replay_sanitizer_clean_run_and_injected_leak(tiny_gateway_parts):
+    """Dynamic coverage behind the static RA01/RA02 rules: a clean
+    SessionManager run executes fully sanitized (and stays bit-identical),
+    while a wall-clock read smuggled into the serving path raises
+    ReplaySanitizerError instead of desynchronizing the replay."""
+    params, bank = tiny_gateway_parts
+    mgr = _manager(_gateway(params, bank))
+    frames = _frames(8)
+    _, report = mgr.run(frames)
+    with replay_sanitizer():
+        _, report2 = mgr.run(frames)
+    assert report.signature() == report2.signature()
+
+    gw = _gateway(params, bank)
+    leaky_mgr = _manager(gw)
+    inner = gw._cloud_fn
+
+    def leaky_cloud_fn(params, z_tilde):
+        time.time()                        # the smuggled wall-clock read
+        return inner(params, z_tilde)
+
+    gw._cloud_fn = leaky_cloud_fn
+    with replay_sanitizer():
+        with pytest.raises(ReplaySanitizerError, match="time.time"):
+            leaky_mgr.run(frames)
 
 
 def test_overload_degrades_down_the_ladder_before_shedding(
