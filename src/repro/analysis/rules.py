@@ -33,7 +33,7 @@ CONFIG: dict = {
     # sanctioned wall-clock sink (stage timers, never trace/telemetry input).
     "virtual_clock_scope": [
         "src/repro/serve/", "src/repro/session/", "src/repro/codec/",
-        "src/repro/pipeline/", "src/repro/obs/",
+        "src/repro/pipeline/", "src/repro/obs/", "src/repro/tasks/",
     ],
     "virtual_clock_allow_files": {
         "src/repro/obs/hooks.py":
@@ -67,6 +67,7 @@ CONFIG: dict = {
     "set_iteration_scope": [
         "src/repro/serve/", "src/repro/session/", "src/repro/codec/",
         "src/repro/core/", "src/repro/pipeline/", "src/repro/obs/",
+        "src/repro/tasks/",
     ],
     # RA03: the only files allowed to touch the version-skewed jax surface.
     "compat_shims": ["src/repro/kernels/compat.py", "src/repro/compat.py"],

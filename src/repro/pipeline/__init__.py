@@ -17,13 +17,14 @@ benchmarks construct all coding state through this package (the old loose
 """
 from repro.pipeline.op import (SESSION_WIRE_VERSION, WIRE_PROFILE_VERSION,
                                Capabilities, NegotiationError, OperatingPoint,
-                               negotiate, negotiate_session)
+                               negotiate, negotiate_session, negotiate_tasks)
 from repro.pipeline.plan import (CompressionPlan, DecodedBatch, ModelSpec,
                                  WireBlob, blob_from_tensor, compile)
 
 __all__ = [
     "SESSION_WIRE_VERSION", "WIRE_PROFILE_VERSION", "Capabilities",
     "NegotiationError", "OperatingPoint", "negotiate", "negotiate_session",
+    "negotiate_tasks",
     "CompressionPlan", "DecodedBatch", "ModelSpec", "WireBlob",
     "blob_from_tensor", "compile",
 ]

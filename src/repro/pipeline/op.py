@@ -125,12 +125,20 @@ class Capabilities:
     session_profiles : SessionFrame framing generations the decode side
                 speaks (empty tuple = no temporal P-frames; sessions run
                 I-only when downgrade is allowed)
+    task_heads : downstream task heads this endpoint serves (None = every
+                registered head; see repro.tasks.heads). A declared task
+                the endpoint does not serve is dropped when downgrade is
+                allowed, refused otherwise (:func:`negotiate_tasks`)
     """
     profiles: tuple = (WIRE_PROFILE_VERSION,)
     backends: tuple | None = None
     max_bits: int = 16
     downgrade: bool = True
     session_profiles: tuple = (SESSION_WIRE_VERSION,)
+    task_heads: tuple | None = None
+
+    def serves_task(self, name: str) -> bool:
+        return self.task_heads is None or name in self.task_heads
 
     def speaks_backend(self, name: str) -> bool:
         return self.backends is None or name in self.backends
@@ -197,3 +205,37 @@ def negotiate_session(caps: Capabilities | None, *,
     raise NegotiationError(
         f"endpoint speaks session profiles {caps.session_profiles}, stream "
         f"requires profile {profile} and downgrade is disabled")
+
+
+def negotiate_tasks(tasks, caps: Capabilities | None) -> tuple:
+    """Fit a tenant's declared task set to the endpoint's served heads.
+
+    Returns the effective task tuple (declaration order kept, duplicates
+    dropped). A declared head the endpoint does not serve is dropped when
+    ``caps.downgrade`` allows it — the tenant is served the subset and,
+    through bit allocation, only pays for that subset; with downgrade
+    disabled, or when nothing declared survives, the whole declaration is
+    refused (:class:`NegotiationError`). Task negotiation never touches the
+    operating point — wire-profile and backend fitting stay in
+    :func:`negotiate`, so a foreign wire profile still refuses regardless
+    of how few heads a tenant declares.
+    """
+    declared = tuple(dict.fromkeys(tasks))
+    if not declared:
+        raise ValueError("empty task declaration (declare at least one "
+                         "task head)")
+    if caps is None or caps.task_heads is None:
+        return declared
+    served = tuple(t for t in declared if t in caps.task_heads)
+    if served == declared:
+        return declared
+    dropped = [t for t in declared if t not in caps.task_heads]
+    if not caps.downgrade:
+        raise NegotiationError(
+            f"endpoint serves task heads {sorted(caps.task_heads)}, tenant "
+            f"declared unsupported {dropped} and downgrade is disabled")
+    if not served:
+        raise NegotiationError(
+            f"endpoint serves task heads {sorted(caps.task_heads)}; none of "
+            f"the declared tasks {list(declared)} can be served")
+    return served

@@ -34,7 +34,8 @@ from repro.serve.rate_control import (ContentKeyedController,
                                       RDPoint, build_rd_table,
                                       codec_revision, load_or_build_rd_table,
                                       rd_grid, rd_table_from_json,
-                                      rd_table_to_json)
+                                      rd_table_to_json,
+                                      session_bits_per_frame)
 from repro.serve.scheduler import (DeficitRoundRobinScheduler, TenantSpec,
                                    UplinkJob)
 from repro.serve.telemetry import (DegradeRecord, RequestRecord, ShedRecord,
@@ -56,7 +57,7 @@ __all__ = [
     "ContentKeyedController", "OperatingPoint",
     "RateController", "RDPoint", "build_rd_table", "codec_revision",
     "load_or_build_rd_table", "rd_grid", "rd_table_from_json",
-    "rd_table_to_json",
+    "rd_table_to_json", "session_bits_per_frame",
     "DeficitRoundRobinScheduler", "TenantSpec", "UplinkJob",
     "DegradeRecord", "RequestRecord", "ShedRecord", "Telemetry",
     "jain_fairness",

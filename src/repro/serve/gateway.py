@@ -243,6 +243,33 @@ class ServingGateway:
         # repro: allow[RA01] -- warm-timing helper (see t0 above)
         return logits, time.perf_counter() - t0
 
+    def _response_for(self, req: EncodedRequest, ticket: ExecTicket,
+                      row: int, op, stats):
+        """Build one request's response from its executor ticket row.
+
+        Subclass hook: a task-aware gateway returns a fan-out response
+        carrying each of the tenant's declared head outputs (repro.tasks);
+        the base gateway returns the single-consumer logits row."""
+        return GatewayResponse(req_id=req.req_id, logits=ticket.logits[row],
+                               op=op, stats=stats)
+
+    def _exec_batch_spans(self, tracer, ticket: ExecTicket) -> None:
+        """Emit batch-level spans for one executor ticket (tracer != None).
+
+        Subclass hook: a task-aware gateway adds per-head ``head.<task>``
+        child spans alongside the base ``exec.batch`` span."""
+        batch = ticket.batch
+        tracer.span("exec.batch", ticket.t_start, ticket.t_done,
+                    track=f"exec-q{ticket.queue}", seq=ticket.seq,
+                    n_requests=len(batch.requests),
+                    padded_size=batch.padded_size)
+
+    def _post_record(self, req: EncodedRequest, out,
+                     telemetry: Telemetry) -> None:
+        """Per-request hook after telemetry.record (base: no-op).
+
+        A task-aware gateway meters per-task request counters here."""
+
     def _record_ticket(self, ticket: ExecTicket, responses,
                        telemetry: Telemetry) -> None:
         """Fan one finished executor ticket out to per-request results.
@@ -256,14 +283,10 @@ class ServingGateway:
         tracer = self.tracer
         batch = ticket.batch
         if tracer is not None:
-            tracer.span("exec.batch", ticket.t_start, ticket.t_done,
-                        track=f"exec-q{ticket.queue}", seq=ticket.seq,
-                        n_requests=len(batch.requests),
-                        padded_size=batch.padded_size)
+            self._exec_batch_spans(tracer, ticket)
         for row, req in enumerate(batch.requests):      # padding rows ignored
             op, stats, tx = req.meta[:3]
-            out = GatewayResponse(req_id=req.req_id, logits=ticket.logits[row],
-                                  op=op, stats=stats)
+            out = self._response_for(req, ticket, row, op, stats)
             # "" is the documented single-tenant sentinel (serve/batcher.py);
             # the multi-tenant arrive handler always sets a tenant name and
             # appends the UplinkJob as meta[3]
@@ -304,6 +327,7 @@ class ServingGateway:
                             track=track, parent=root,
                             exec_queue=ticket.queue,
                             batch_size=len(batch.requests))
+            self._post_record(req, out, telemetry)
 
     # -- orchestration loop -------------------------------------------------
     def serve(self, imgs, *, submit_times=None) -> tuple[list[GatewayResponse],

@@ -46,6 +46,10 @@ class RDPoint:
     # means "no content keying for this point"
     calib_peak: float = math.nan
     calib_range: float = math.nan
+    # expected P-frame/I-frame wire-bit ratio of the session codec at this
+    # point (repro.session temporal delta coding); NaN means unmeasured —
+    # session pricing then falls back to I-only cost, the legacy behaviour
+    p_over_i: float = math.nan
 
 
 class RateController:
@@ -142,6 +146,39 @@ class ContentKeyedController(RateController):
         return max(pool, key=lambda p: (est[id(p)], -p.bits_per_example))
 
 
+def session_bits_per_frame(point: RDPoint, *, keyframe_interval: int,
+                           frame_stride: int = 1) -> float:
+    """Expected wire bits per camera frame of a temporal session at this
+    operating point.
+
+    RD tables price I-frames (``bits_per_example`` is a standalone
+    container); a streaming session interleaves cheap P-frames
+    (repro.session), so pricing rungs off the I-only number overestimates
+    their wire cost. With the point's measured ``p_over_i`` ratio:
+
+        keyframe_interval k >= 1 : (1 + (k-1)·ratio) / k   of I-frame bits
+        keyframe_interval 0      : ratio (steady state all-P after frame 0)
+
+    divided by ``frame_stride`` (a rung serving every Nth camera frame
+    offers 1/N of the per-frame load). A NaN ratio degrades to the legacy
+    I-only price, so tables without the measurement keep old behaviour.
+    """
+    if keyframe_interval < 0:
+        raise ValueError("keyframe_interval must be >= 0")
+    if frame_stride < 1:
+        raise ValueError("frame_stride must be >= 1")
+    i_bits = point.bits_per_example
+    ratio = point.p_over_i
+    if not math.isfinite(ratio):
+        per_frame = i_bits
+    elif keyframe_interval == 0:
+        per_frame = ratio * i_bits
+    else:
+        k = keyframe_interval
+        per_frame = i_bits * (1.0 + (k - 1) * ratio) / k
+    return per_frame / frame_stride
+
+
 def rd_grid(baf_bank: dict, bits_sweep=(2, 4, 6, 8),
             backend: str = "zlib") -> list[OperatingPoint]:
     """The default calibration grid: every bank C crossed with the bit sweep
@@ -233,7 +270,8 @@ def rd_table_to_json(table: list[RDPoint]) -> list[dict]:
     return [{**op_to_json(p.op),
              "bits_per_example": p.bits_per_example, "psnr_db": p.psnr_db,
              "kl": p.kl, "calib_peak": p.calib_peak,
-             "calib_range": p.calib_range} for p in table]
+             "calib_range": p.calib_range, "p_over_i": p.p_over_i}
+            for p in table]
 
 
 def rd_table_from_json(rows: list[dict]) -> list[RDPoint]:
@@ -241,7 +279,8 @@ def rd_table_from_json(rows: list[dict]) -> list[RDPoint]:
                     bits_per_example=float(r["bits_per_example"]),
                     psnr_db=float(r["psnr_db"]), kl=float(r["kl"]),
                     calib_peak=float(r.get("calib_peak", math.nan)),
-                    calib_range=float(r.get("calib_range", math.nan)))
+                    calib_range=float(r.get("calib_range", math.nan)),
+                    p_over_i=float(r.get("p_over_i", math.nan)))
             for r in rows]
 
 
@@ -258,8 +297,8 @@ def codec_revision() -> str:
 
 
 def load_or_build_rd_table(cache_path, key: dict | None = None, build=None, *,
-                           ops: "list[OperatingPoint] | None" = None
-                           ) -> list[RDPoint]:
+                           ops: "list[OperatingPoint] | None" = None,
+                           tasks: dict | None = None) -> list[RDPoint]:
     """RD sweeps re-encode every calibration example at every operating
     point — too slow to redo per CI run now that the rANS backends are in
     the sweep. Cache the table to disk keyed by the sweep's identity.
@@ -269,15 +308,22 @@ def load_or_build_rd_table(cache_path, key: dict | None = None, build=None, *,
 
       * the full ``ops`` grid (every field of every operating point) when
         given — a sweep over different backends, bit depths, tilings, or
-        wire profiles can never alias a cached table, and
+        wire profiles can never alias a cached table,
       * :func:`codec_revision` — container-format changes invalidate every
         cached table automatically (pre-plan caches keyed on backend+seed
-        only are treated as stale and rebuilt in place).
+        only are treated as stale and rebuilt in place), and
+      * the ``tasks`` identity when given (head-set + task-weight vector,
+        conventionally :func:`repro.tasks.task_set_key`) — a table swept
+        for one task mix can never be served to a caller pricing a
+        different head set or weighting; in particular a plain single-task
+        cache (no ``tasks`` key on disk) is stale for any task-aware
+        caller and rebuilds in place, and vice versa.
 
     cache_path : JSON file (conventionally ``benchmarks/rd_cache_*.json``)
     key        : JSON-serializable dict of extra sweep inputs (seed, calib …)
     build      : zero-arg callable returning the table on cache miss
     ops        : the operating-point grid the build sweeps
+    tasks      : JSON-serializable head-set/weight identity of the sweep
     """
     import json
     import os
@@ -290,6 +336,8 @@ def load_or_build_rd_table(cache_path, key: dict | None = None, build=None, *,
     if ops is not None:
         full_key["ops"] = [op_to_json(p) for p in ops]
     full_key["codec_rev"] = codec_revision()
+    if tasks is not None:
+        full_key["tasks"] = dict(tasks)
 
     cache_path = os.fspath(cache_path)
     try:

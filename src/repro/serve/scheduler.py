@@ -38,16 +38,27 @@ from typing import Any, Iterable
 class TenantSpec:
     """Static per-tenant policy: DRR weight, an optional quality floor
     override consulted by the rate controller (None = controller default),
-    and the priority class admission control sheds by (higher = shed later;
-    see repro.serve.executor.QueueDepthAdmission)."""
+    the priority class admission control sheds by (higher = shed later;
+    see repro.serve.executor.QueueDepthAdmission), and the declared task
+    set — which downstream heads this tenant consumes (empty = undeclared:
+    a task-aware gateway serves its full head set; see repro.tasks). The
+    declaration is negotiated against the gateway's capabilities
+    (pipeline.negotiate_tasks) and drives bit allocation, so a tenant
+    declaring only ``classify`` never pays detection-grade bits."""
     name: str
     weight: float = 1.0
     quality_floor_db: float | None = None
     priority: int = 0
+    tasks: tuple = ()
 
     def __post_init__(self):
         if self.weight <= 0:
             raise ValueError(f"tenant {self.name!r}: weight must be > 0")
+        if not isinstance(self.tasks, tuple):
+            object.__setattr__(self, "tasks", tuple(self.tasks))
+        if any(not isinstance(t, str) or not t for t in self.tasks):
+            raise ValueError(f"tenant {self.name!r}: tasks must be non-empty "
+                             f"head names, got {self.tasks!r}")
 
 
 @dataclass

@@ -182,6 +182,17 @@ class SessionManager:
     recovery : RecoveryConfig — NACK latency etc.
     upgrade_hold : clean admissions before stepping back up one rung
     batch_window_s : micro-batch window on the decoded-request path
+    rd_table : RD table whose points carry the measured ``p_over_i`` ratio
+        (serve.rate_control.RDPoint) — enables P-frame-aware pricing of the
+        ladder rungs; None (default) keeps the legacy behaviour
+    frame_budget_bits : per-frame wire-bit budget sessions should start
+        within. With ``rd_table``, every session's *initial* rung is the
+        best (first) rung whose expected per-frame session cost —
+        ``session_bits_per_frame`` over the rung's keyframe interval and
+        stride — fits this budget (floor rung if none fits). RD tables
+        price I-frames only; without the P/I ratio a temporal rung's wire
+        cost is overestimated and ladders start lower than they need to.
+        None (default) starts at rung 0, the legacy behaviour.
     """
 
     def __init__(self, gateway, sessions, *, ladder,
@@ -189,7 +200,8 @@ class SessionManager:
                  channels: dict | None = None,
                  recovery: RecoveryConfig | None = None,
                  upgrade_hold: int = 16, batch_window_s: float | None = 0.02,
-                 seed: int = 0):
+                 seed: int = 0, rd_table=None,
+                 frame_budget_bits: float | None = None):
         ladder = tuple(ladder)
         if not ladder:
             raise ValueError("need at least one QoS rung")
@@ -225,6 +237,34 @@ class SessionManager:
         # every session shares the gateway's negotiated capabilities: a
         # gateway that never negotiated the session profile streams I-only
         self._levels = tuple(gateway._fit_op(l.op) for l in ladder)
+        self._initial_level = 0
+        if rd_table is not None and frame_budget_bits is not None:
+            self._initial_level = self._priced_initial_level(
+                rd_table, float(frame_budget_bits))
+
+    def _priced_initial_level(self, rd_table, frame_budget_bits: float) -> int:
+        """Best (first) rung whose expected per-frame session wire cost fits
+        the budget; the floor rung when none does.
+
+        Each rung is priced through its *negotiated* operating point's RD
+        entry via :func:`repro.serve.rate_control.session_bits_per_frame`,
+        so P-frame savings (the point's measured ``p_over_i``) count —
+        I-only pricing would overshoot temporal rungs and start sessions
+        lower than the budget warrants. A rung with no table entry is
+        skipped (never guessed at).
+        """
+        from repro.serve.rate_control import session_bits_per_frame
+        by_op = {p.op.resolve(): p for p in rd_table}
+        for i, rung in enumerate(self.ladder):
+            point = by_op.get(self._levels[i].resolve())
+            if point is None:
+                continue
+            cost = session_bits_per_frame(
+                point, keyframe_interval=rung.keyframe_interval,
+                frame_stride=rung.frame_stride)
+            if cost <= frame_budget_bits:
+                return i
+        return len(self.ladder) - 1
 
     # -- executor run_fn (decoded-request currency) -------------------------
     def _make_run_fn(self, op: OperatingPoint):
@@ -274,7 +314,8 @@ class SessionManager:
                 decoder=SessionDecoder(cfg, gw.plan_for),
                 tracker=RecoveryTracker(),
                 channel=self.channels[spec.name],
-                priority=gw.specs[spec.name].priority)
+                priority=gw.specs[spec.name].priority,
+                level=self._initial_level)
         telemetry = Telemetry(registry=gw.metrics)
         batcher = MicroBatcher(max_batch=gw.max_batch,
                                window_s=self.batch_window_s)

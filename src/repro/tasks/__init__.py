@@ -1,0 +1,30 @@
+"""Multi-task serving: one encoded BaF stream, N downstream task heads.
+
+The task layer on top of pipeline + serve (see docs/MULTITASK.md):
+
+  * :mod:`repro.tasks.heads` — the TaskHead registry (classify / detect /
+    embed) with jitted forwards over the restored tensor;
+  * :mod:`repro.tasks.distortion` — per-task output-divergence RD tables
+    (one encode/decode/restore per operating point, head fan-out);
+  * :mod:`repro.tasks.allocation` — deterministic bit allocation across a
+    tenant's declared task set (degrade-before-shed under pressure);
+  * :mod:`repro.tasks.gateway` — MultiTaskGateway: one decode + one restore
+    per micro-batch fanned out to every subscribed head.
+"""
+from repro.tasks.allocation import AllocationDecision, BitAllocationController
+from repro.tasks.distortion import (build_task_rd_tables, divergence_to_db,
+                                    load_or_build_task_tables, task_set_key,
+                                    task_divergences)
+from repro.tasks.gateway import MultiTaskGateway, MultiTaskResponse
+from repro.tasks.heads import (HeadConfig, TaskHead, available_heads,
+                               get_head, init_head_bank, register_head,
+                               run_heads)
+
+__all__ = [
+    "AllocationDecision", "BitAllocationController",
+    "build_task_rd_tables", "divergence_to_db", "load_or_build_task_tables",
+    "task_set_key", "task_divergences",
+    "MultiTaskGateway", "MultiTaskResponse",
+    "HeadConfig", "TaskHead", "available_heads", "get_head",
+    "init_head_bank", "register_head", "run_heads",
+]

@@ -1,0 +1,242 @@
+"""Task-head registry: N downstream consumers of one restored BaF tensor.
+
+The source paper compresses the split activation for exactly one consumer
+(the detector's cloud half). The multi-task line of work (Alvar & Bajić
+2020, arXiv 2002.07048; "Multi-task learning with compressible features",
+arXiv 1902.05179) shares that single encoded stream across several task
+heads — here:
+
+  * ``classify``: the repo's own cloud tail (models/cnn.py ``cnn_cloud``)
+    — Leaky sigma, darknet res blocks, GAP, dense class head. It reuses the
+    gateway's CNN params; the head bank carries no extra weights for it.
+  * ``detect``: a dense per-cell prediction head in the style of
+    models/encdec.py's encoder block — the restored tensor's spatial grid
+    is flattened to tokens, projected to a small d_model, passed through
+    one bidirectional LayerNorm-attention + GELU-FFN block
+    (models/attention.py + models/ffn.py, the exact primitives encdec's
+    ``_enc_block_init`` composes), then projected to a YOLO-shaped
+    (box_fields + num_classes) vector per cell.
+  * ``embed``: a lightweight retrieval embedding — Leaky sigma, global
+    average pool, dense projection, L2 normalization.
+
+Every head consumes the *restored* tensor ``z_tilde`` that
+:meth:`repro.pipeline.CompressionPlan.restore` produces — one decode +
+restore pass feeds all of them (the gateway asserts this). Forwards are
+jitted once per (head, config) via an lru cache, mirroring
+``core.split._jitted_cnn_fns`` so per-tenant gateways in tests/benchmarks
+share one trace cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.models.attention import attention_apply, init_attention
+from repro.models.ffn import ffn_apply, init_ffn
+
+
+class HeadConfig(NamedTuple):
+    """Static geometry every head's init/forward closes over.
+
+    split_p     : channels of the restored split tensor (CNNConfig.split_p)
+    num_classes : classification/detection class count
+    d_model     : token width of the detect head's encoder block
+    n_heads     : attention heads of the detect head
+    d_ff        : FFN width of the detect head
+    box_fields  : per-cell box regression slots of the detect head
+    embed_dim   : output width of the embedding head
+    """
+    split_p: int
+    num_classes: int = 8
+    d_model: int = 32
+    n_heads: int = 2
+    d_ff: int = 64
+    box_fields: int = 5
+    embed_dim: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_model % self.n_heads:
+            raise ValueError(f"d_model {self.d_model} not divisible by "
+                             f"n_heads {self.n_heads}")
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class TaskHead:
+    """One registered downstream task.
+
+    init(key, cfg)                      -> head params (may be empty: the
+                                           classify head reuses CNN params)
+    forward(cnn_params, head_params, z, cfg) -> task output for the batch
+    divergence(ref, out)                -> scalar output divergence of this
+                                           head's outputs vs the
+                                           uncompressed-tensor reference
+                                           (0 = identical; lower is better)
+    """
+    name: str
+    init: Callable
+    forward: Callable
+    divergence: Callable
+
+
+_REGISTRY: dict[str, TaskHead] = {}
+
+
+def register_head(head: TaskHead) -> TaskHead:
+    if head.name in _REGISTRY:
+        raise ValueError(f"task head {head.name!r} already registered")
+    _REGISTRY[head.name] = head
+    return head
+
+
+def get_head(name: str) -> TaskHead:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown task head {name!r} "
+                       f"(registered: {available_heads()})") from None
+
+
+def available_heads() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# classify — the repo's own cloud tail
+# ---------------------------------------------------------------------------
+
+def _classify_init(key, cfg: HeadConfig):
+    return {}                    # reuses the gateway's CNN cloud-half params
+
+
+def _classify_forward(cnn_params, head_params, z, cfg: HeadConfig):
+    from repro.models.cnn import cnn_cloud
+    return cnn_cloud(cnn_params, z)
+
+
+def _softmax_kl(ref: np.ndarray, out: np.ndarray) -> float:
+    """Mean KL(ref || out) of softmaxed logits — the same divergence
+    core.split.fidelity_metrics reports for the downstream classifier."""
+    ref = np.asarray(ref, np.float64)
+    out = np.asarray(out, np.float64)
+    ref = ref - ref.max(axis=-1, keepdims=True)
+    out = out - out.max(axis=-1, keepdims=True)
+    p = np.exp(ref) / np.exp(ref).sum(axis=-1, keepdims=True)
+    q = np.exp(out) / np.exp(out).sum(axis=-1, keepdims=True)
+    eps = 1e-12
+    return float(np.mean(np.sum(p * (np.log(p + eps) - np.log(q + eps)),
+                                axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# detect — encdec-style dense per-cell head
+# ---------------------------------------------------------------------------
+
+def _detect_init(key, cfg: HeadConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "proj": nn.init_dense(k1, cfg.split_p, cfg.d_model),
+        # one bidirectional encoder block, the encdec _enc_block_init shape
+        "ln1": nn.init_layernorm(cfg.d_model, jnp.float32),
+        "attn": init_attention(k2, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                               cfg.head_dim, qkv_bias=True),
+        "ln2": nn.init_layernorm(cfg.d_model, jnp.float32),
+        "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, "gelu", jnp.float32),
+        "out": nn.init_dense(k4, cfg.d_model,
+                             cfg.box_fields + cfg.num_classes),
+    }
+
+
+def _detect_forward(cnn_params, head_params, z, cfg: HeadConfig):
+    b, h, w, _ = z.shape
+    x = nn.leaky_relu(z).reshape(b, h * w, z.shape[-1])
+    x = nn.dense_apply(head_params["proj"], x)
+    attn = attention_apply(
+        head_params["attn"], nn.layernorm_apply(head_params["ln1"], x),
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads, head_dim=cfg.head_dim,
+        rope_theta=10000.0, causal=False)
+    x = x + attn
+    x = x + ffn_apply(head_params["ffn"],
+                      nn.layernorm_apply(head_params["ln2"], x), "gelu")
+    y = nn.dense_apply(head_params["out"], x)
+    return y.reshape(b, h, w, cfg.box_fields + cfg.num_classes)
+
+
+def _normalized_mse(ref: np.ndarray, out: np.ndarray) -> float:
+    """MSE of the dense map normalized by reference power (scale-free)."""
+    ref = np.asarray(ref, np.float64)
+    out = np.asarray(out, np.float64)
+    denom = float(np.mean(ref * ref)) + 1e-12
+    return float(np.mean((ref - out) ** 2)) / denom
+
+
+# ---------------------------------------------------------------------------
+# embed — lightweight retrieval embedding
+# ---------------------------------------------------------------------------
+
+def _embed_init(key, cfg: HeadConfig):
+    return {"proj": nn.init_dense(key, cfg.split_p, cfg.embed_dim)}
+
+
+def _embed_forward(cnn_params, head_params, z, cfg: HeadConfig):
+    feat = jnp.mean(nn.leaky_relu(z), axis=(1, 2))          # GAP
+    e = nn.dense_apply(head_params["proj"], feat)
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8)
+
+
+def _cosine_distance(ref: np.ndarray, out: np.ndarray) -> float:
+    """Mean (1 - cosine) over embedding rows (rows are ~unit-norm)."""
+    ref = np.asarray(ref, np.float64)
+    out = np.asarray(out, np.float64)
+    num = np.sum(ref * out, axis=-1)
+    den = (np.linalg.norm(ref, axis=-1) * np.linalg.norm(out, axis=-1)
+           + 1e-12)
+    return float(np.mean(1.0 - num / den))
+
+
+register_head(TaskHead(name="classify", init=_classify_init,
+                       forward=_classify_forward, divergence=_softmax_kl))
+register_head(TaskHead(name="detect", init=_detect_init,
+                       forward=_detect_forward, divergence=_normalized_mse))
+register_head(TaskHead(name="embed", init=_embed_init,
+                       forward=_embed_forward, divergence=_cosine_distance))
+
+
+# ---------------------------------------------------------------------------
+# Banks and jitted forwards
+# ---------------------------------------------------------------------------
+
+def init_head_bank(key, cfg: HeadConfig, *, heads=None) -> dict:
+    """{name: head_params} for ``heads`` (default: every registered head)."""
+    names = tuple(sorted(heads)) if heads is not None else available_heads()
+    keys = jax.random.split(key, max(len(names), 2))
+    return {name: get_head(name).init(k, cfg)
+            for name, k in zip(names, keys)}
+
+
+@lru_cache(maxsize=None)
+def _jitted_head_fn(name: str, cfg: HeadConfig):
+    """Process-wide jit cache, one trace per (head, config, input shape) —
+    the head analogue of ``core.split._jitted_cnn_fns``."""
+    head = get_head(name)
+    return jax.jit(lambda p, hp, z: head.forward(p, hp, z, cfg))
+
+
+def run_heads(cnn_params, head_bank: dict, z, tasks, cfg: HeadConfig) -> dict:
+    """Run each requested head once over the (restored) tensor ``z``.
+
+    Returns {task: np.ndarray} with the batch dimension leading; iteration
+    is over the sorted task list so output construction is deterministic.
+    """
+    out = {}
+    for task in sorted(set(tasks)):
+        y = _jitted_head_fn(task, cfg)(cnn_params, head_bank[task], z)
+        out[task] = np.asarray(jax.block_until_ready(y))
+    return out

@@ -156,3 +156,52 @@ def test_select_for_respects_per_tenant_floor_override():
     # controller floor is unreachable, per-tenant override is not
     pick = rc.select_for(5_000, None, 19.0)
     assert pick.op == OperatingPoint(c=8, bits=4)
+
+
+# -- P-frame-aware session pricing ------------------------------------------
+
+def _pt(p_over_i=math.nan, bits=8_000.0):
+    return RDPoint(OperatingPoint(c=8, bits=6), bits_per_example=bits,
+                   psnr_db=25.0, p_over_i=p_over_i)
+
+
+def test_session_bits_without_measured_ratio_is_i_only():
+    from repro.serve import session_bits_per_frame
+    assert session_bits_per_frame(_pt(), keyframe_interval=8) == 8_000.0
+    assert session_bits_per_frame(_pt(), keyframe_interval=0) == 8_000.0
+
+
+def test_session_bits_interpolates_keyframe_interval():
+    from repro.serve import session_bits_per_frame
+    p = _pt(p_over_i=0.5)
+    # k=1 = every frame an I-frame; k=4 = I,P,P,P; k=0 = all-P steady state
+    assert session_bits_per_frame(p, keyframe_interval=1) == 8_000.0
+    assert session_bits_per_frame(p, keyframe_interval=4) == \
+        pytest.approx(8_000.0 * (1 + 3 * 0.5) / 4)
+    assert session_bits_per_frame(p, keyframe_interval=0) == \
+        pytest.approx(4_000.0)
+
+
+def test_session_bits_stride_divides_and_args_validate():
+    from repro.serve import session_bits_per_frame
+    p = _pt(p_over_i=0.25)
+    full = session_bits_per_frame(p, keyframe_interval=8)
+    assert session_bits_per_frame(p, keyframe_interval=8,
+                                  frame_stride=2) == pytest.approx(full / 2)
+    with pytest.raises(ValueError):
+        session_bits_per_frame(p, keyframe_interval=-1)
+    with pytest.raises(ValueError):
+        session_bits_per_frame(p, keyframe_interval=8, frame_stride=0)
+
+
+@given(ratio=st.floats(0.0, 1.0) if HAVE_HYPOTHESIS else None,
+       k=st.integers(1, 32) if HAVE_HYPOTHESIS else None)
+@settings(max_examples=100, deadline=None)
+def test_session_bits_bounded_by_i_only_price(ratio, k):
+    """P-frames only ever save bits: the session price never exceeds the
+    I-only price and never drops below the all-P steady state."""
+    from repro.serve import session_bits_per_frame
+    p = _pt(p_over_i=ratio)
+    per = session_bits_per_frame(p, keyframe_interval=k)
+    assert per <= p.bits_per_example + 1e-9
+    assert per >= ratio * p.bits_per_example - 1e-9

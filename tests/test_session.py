@@ -445,3 +445,85 @@ def test_pressure_release_steps_back_up(tiny_gateway_parts):
                                                    seed=11)})
     assert report.telemetry.degrade_by_tenant() == {"cam0": 2}
     assert report.final_levels["cam0"] < 2   # climbed back off the floor
+
+
+# ---------------------------------------------------------------------------
+# P-frame-aware initial level selection (rd_table + frame_budget_bits)
+# ---------------------------------------------------------------------------
+
+def _priced_table():
+    """The test ladder's ops priced with measured P/I ratios.
+
+    Per-frame session price (serve.session_bits_per_frame):
+      level 0: k=0  all-P      -> 10_000 * 0.5          = 5_000
+      level 1: k=8             ->  8_000 * (1+7/4)/8    = 2_750
+      level 2: k=8, stride=2   ->  6_000 * (1+7/4)/8/2  ~= 1_031
+    """
+    from repro.serve import RDPoint
+    return [RDPoint(LADDER[0].op, 10_000.0, 30.0, p_over_i=0.5),
+            RDPoint(LADDER[1].op, 8_000.0, 26.0, p_over_i=0.25),
+            RDPoint(LADDER[2].op, 6_000.0, 22.0, p_over_i=0.25)]
+
+
+def test_manager_prices_initial_level_with_p_frame_savings(
+        tiny_gateway_parts):
+    params, bank = tiny_gateway_parts
+    mgr = _manager(_gateway(params, bank))
+    mgr_priced = SessionManager(
+        _gateway(params, bank),
+        [SessionSpec(name=f"cam{i}", fps=20.0, start_s=0.002 * i)
+         for i in range(3)],
+        ladder=LADDER,
+        channel_cfg=ChannelConfig(bandwidth_bps=20e6, base_latency_s=0.005,
+                                  mtu_bytes=256),
+        recovery=RecoveryConfig(nack_latency_s=0.01), seed=3,
+        rd_table=_priced_table(), frame_budget_bits=3_000.0)
+    assert mgr._initial_level == 0          # default: best rung
+    assert mgr_priced._initial_level == 1   # 5_000 > budget, 2_750 fits
+    _, report = mgr_priced.run(_frames(8))
+    for name in report.frames:
+        assert report.frames[name][0].level == 1
+    # I-only pricing would have sent sessions to the floor: rung 1's
+    # I-frame price (8_000) busts the budget, its session price does not
+    assert _priced_table()[1].bits_per_example > 3_000.0
+
+
+def test_manager_priced_level_skips_unpriced_rungs_and_floors_out(
+        tiny_gateway_parts):
+    params, bank = tiny_gateway_parts
+
+    def priced(table, budget):
+        return SessionManager(
+            _gateway(params, bank), [SessionSpec(name="cam0", fps=20.0)],
+            ladder=LADDER,
+            channel_cfg=ChannelConfig(bandwidth_bps=20e6,
+                                      base_latency_s=0.005, mtu_bytes=256),
+            recovery=RecoveryConfig(nack_latency_s=0.01),
+            rd_table=table, frame_budget_bits=budget)
+
+    # only the floor rung is priced; rungs without an entry are skipped
+    assert priced(_priced_table()[2:], 2_000.0)._initial_level == 2
+    # nothing fits the budget -> the floor rung, never an error
+    assert priced(_priced_table(), 10.0)._initial_level == 2
+
+
+def test_manager_pricing_with_ample_budget_replays_default_exactly(
+        tiny_gateway_parts):
+    """The satellite's regression gate: the priced path with a budget no
+    rung busts starts at rung 0 and reproduces the committed default-path
+    behaviour bit for bit."""
+    params, bank = tiny_gateway_parts
+    frames = _frames(12)
+    _, base = _manager(_gateway(params, bank)).run(frames)
+    priced = SessionManager(
+        _gateway(params, bank),
+        [SessionSpec(name=f"cam{i}", fps=20.0, start_s=0.002 * i)
+         for i in range(3)],
+        ladder=LADDER,
+        channel_cfg=ChannelConfig(bandwidth_bps=20e6, base_latency_s=0.005,
+                                  mtu_bytes=256),
+        recovery=RecoveryConfig(nack_latency_s=0.01), seed=3,
+        rd_table=_priced_table(), frame_budget_bits=1e9)
+    assert priced._initial_level == 0
+    _, rep = priced.run(frames)
+    assert rep.signature() == base.signature()
